@@ -1,0 +1,111 @@
+"""Shared benchmark fixtures: datasets, indices, timing, latency-at-recall.
+
+Benchmarks mirror the paper's methodology: methods are compared at EQUAL
+RECALL by sweeping the queue capacity L (the paper's recall knob) and
+reporting latency/work at the smallest L reaching each target.  Scale is
+laptop-CPU (n≈8–20k, synthetic clustered vectors with exact ground truth);
+the paper's 1M–1B runs map onto the dry-run/roofline path instead.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SearchConfig
+from repro.core import (bfis_search_batch, build_hnsw, build_nsg,
+                        hnsw_search_batch, recall_at_k,
+                        search_speedann_batch, search_topm_batch)
+from repro.data import make_vector_dataset
+
+K = 10
+_CACHE: Dict = {}
+
+
+def dataset(name="sift", n=8000, q=64, dim=32, seed=0):
+    key = ("ds", name, n, q, dim, seed)
+    if key not in _CACHE:
+        _CACHE[key] = make_vector_dataset(name, n=n, n_queries=q, k=K,
+                                          dim=dim, n_clusters=64, seed=seed)
+    return _CACHE[key]
+
+
+def nsg_index(ds, degree=24):
+    key = ("nsg", id(ds), degree)
+    if key not in _CACHE:
+        _CACHE[key] = build_nsg(ds.base, degree=degree, knn_k=degree,
+                                ef_construction=2 * degree, passes=2)
+    return _CACHE[key]
+
+
+def hnsw_index(ds, degree=24):
+    key = ("hnsw", id(ds), degree)
+    if key not in _CACHE:
+        _CACHE[key] = build_hnsw(ds.base, degree=degree)
+    return _CACHE[key]
+
+
+def time_batched(fn: Callable, *args, iters=3) -> float:
+    """Wall-clock microseconds per call of a jitted batched search."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_method(method: str, graph_or_idx, queries, cfg: SearchConfig):
+    """Dispatch by method name -> (ids, dists, stats)."""
+    if method == "bfis":
+        return bfis_search_batch(graph_or_idx, queries, cfg)
+    if method == "hnsw":
+        return hnsw_search_batch(graph_or_idx, queries, cfg)
+    if method == "topm":
+        return search_topm_batch(graph_or_idx, queries, cfg)
+    if method == "speedann":
+        return search_speedann_batch(graph_or_idx, queries, cfg)
+    raise ValueError(method)
+
+
+def latency_at_recall(
+    method: str, graph_or_idx, ds, cfg: SearchConfig, target: float,
+    l_sweep=(16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512),
+) -> Tuple[float, float, dict]:
+    """Smallest-L run reaching ``target`` recall.
+
+    Returns (us_per_query, recall, stats_summary); (inf, best_recall, {})
+    when the target is unreachable within the sweep.
+
+    NOTE on latency semantics: this container has ONE cpu core, so the
+    wall clock measures TOTAL WORK.  The paper's latency gains come from
+    running walkers in parallel; ``stats['crit_rounds']`` (sequential
+    expansion rounds) is the measured critical path, and
+    ``modeled_parallel_us = us * crit_rounds / total_expansions``
+    is the W-core latency model reported alongside (see EXPERIMENTS.md).
+    """
+    q = jnp.asarray(ds.queries)
+    best = (float("inf"), 0.0, {})
+    for L in l_sweep:
+        c = cfg.with_(queue_len=L, max_steps=max(6 * L, cfg.max_steps))
+        ids, _, stats = run_method(method, graph_or_idx, q, c)
+        r = recall_at_k(np.asarray(ids), ds.gt_ids, K)
+        if r >= target:
+            us = time_batched(
+                lambda qq: run_method(method, graph_or_idx, qq, c), q)
+            return us / ds.queries.shape[0], r, stats.summary()
+        best = (best[0], max(best[1], r), best[2])
+    return best
+
+
+def modeled_parallel_us(us: float, stats: dict) -> float:
+    """W-core latency model: expansions are the unit of work; walkers run
+    rounds in parallel, so latency ≈ wall_us × crit_rounds / expansions."""
+    total = max(stats.get("local_steps", 0) + stats.get("steps", 0), 1)
+    crit = stats.get("crit_rounds", 0) + stats.get("steps", 0)
+    return us * min(crit / total, 1.0)

@@ -1,0 +1,264 @@
+"""One benchmark per paper table/figure (Speed-ANN, CS.DC 2022).
+
+Each function prints ``name,us_per_call,derived`` CSV rows and returns a
+dict for the harness.  Naming follows the paper:
+  fig05  convergence steps BFiS vs Speed-ANN
+  fig06  distance computations BFiS vs Speed-ANN (M=walkers)
+  fig07  comps & steps vs expansion width M
+  fig08  staged vs non-staged over-expansion
+  fig09  sync frequency vs comps (sync_ratio sweep)
+  fig12  latency at recall targets: Speed-ANN vs NSG(BFiS) vs HNSW
+  fig13  tail latency (per-query percentiles)
+  fig14  thread (walker) scaling
+  fig15  graph-size scaling
+  fig16  §5.3 ablation (NSG-T / NoStaged / NoSync / Adaptive)
+  fig17  neighbor grouping (degree/frequency-centric)
+  tab02  no-sync vs adaptive sync comps+latency
+  tab04  GPU comparison — N/A on this container (documented)
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (K, dataset, hnsw_index, latency_at_recall,
+                               modeled_parallel_us, nsg_index, run_method,
+                               time_batched)
+from repro.config import SearchConfig
+from repro.core import recall_at_k, search_speedann_batch, variant
+from repro.core.graph import group_by_indegree, top_level_hit_fraction
+
+BASE = SearchConfig(k=K, queue_len=64, m_max=8, num_walkers=8,
+                    max_steps=512, local_steps=8, sync_ratio=0.8)
+TARGETS = (0.9, 0.99, 1.0)   # paper: 0.9 / 0.99 / 0.999 (K=10 here)
+
+
+def row(name, us, derived):
+    print(f"{name},{us if us == us else 'nan'},{derived}")
+
+
+def fig05_convergence() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    _, _, s_b = run_method("bfis", g, q, BASE)
+    _, _, s_s = run_method("speedann", g, q, BASE)
+    b, s = float(np.mean(np.asarray(s_b.steps))), float(
+        np.mean(np.asarray(s_s.steps)))
+    row("fig05_convergence_steps", 0,
+        f"bfis_steps={b:.1f};speedann_steps={s:.1f};reduction={b / s:.1f}x")
+    return {"bfis": b, "speedann": s}
+
+
+def fig06_distance_comps() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    _, _, s_b = run_method("bfis", g, q, BASE)
+    _, _, s_m = run_method("topm", g, q, BASE.with_(staged=False))
+    b = float(np.mean(np.asarray(s_b.dist_comps)))
+    m = float(np.mean(np.asarray(s_m.dist_comps)))
+    row("fig06_dist_comps", 0,
+        f"bfis={b:.0f};topm_nostage={m:.0f};overhead={m / b:.2f}x")
+    return {"bfis": b, "topm": m}
+
+
+def fig07_width_sweep() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    out = {}
+    for m in (1, 2, 4, 8, 16):
+        _, _, st = run_method(
+            "topm", g, q, BASE.with_(m_max=m, staged=False))
+        steps = float(np.mean(np.asarray(st.steps)))
+        comps = float(np.mean(np.asarray(st.dist_comps)))
+        out[m] = (steps, comps)
+        row(f"fig07_M{m}", 0, f"steps={steps:.1f};comps={comps:.0f}")
+    return out
+
+
+def fig08_staged() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    cfg = BASE.with_(m_max=16)
+    _, _, s_f = run_method("topm", g, q, cfg.with_(staged=False))
+    _, _, s_s = run_method("topm", g, q, cfg.with_(staged=True))
+    cf = float(np.mean(np.asarray(s_f.dist_comps)))
+    cs = float(np.mean(np.asarray(s_s.dist_comps)))
+    tf = float(np.mean(np.asarray(s_f.steps)))
+    ts = float(np.mean(np.asarray(s_s.steps)))
+    row("fig08_staged", 0,
+        f"comps_fixed={cf:.0f};comps_staged={cs:.0f};"
+        f"steps_fixed={tf:.1f};steps_staged={ts:.1f}")
+    return {"fixed": (tf, cf), "staged": (ts, cs)}
+
+
+def fig09_sync_frequency() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    out = {}
+    for ratio, ls in ((0.5, 2), (0.7, 4), (0.8, 8), (0.9, 16), (2.0, 512)):
+        cfg = BASE.with_(sync_ratio=ratio, local_steps=ls)
+        ids, _, st = run_method("speedann", g, q, cfg)
+        r = recall_at_k(np.asarray(ids), ds.gt_ids, K)
+        out[ratio] = dict(st.summary(), recall=r)
+        row(f"fig09_ratio{ratio}", 0,
+            f"syncs={out[ratio]['syncs']:.1f};"
+            f"comps={out[ratio]['dist_comps']:.0f};recall={r:.3f}")
+    return out
+
+
+def fig12_latency_vs_baselines() -> Dict:
+    """Latency at equal recall.  On this 1-core container the wall clock is
+    total WORK; the paper's latency gain is critical-path parallelism, so we
+    report both the measured work-time and the W-core modeled latency (see
+    common.modeled_parallel_us)."""
+    ds = dataset()
+    g = nsg_index(ds)
+    h = hnsw_index(ds)
+    out = {}
+    for tgt in TARGETS:
+        res = {}
+        for method, idx in (("bfis", g), ("hnsw", h), ("speedann", g)):
+            us, r, stats = latency_at_recall(method, idx, ds, BASE, tgt)
+            mus = modeled_parallel_us(us, stats) if stats else us
+            res[method] = (us, mus)
+            row(f"fig12_{method}_r{tgt}", round(us, 1),
+                f"recall>={tgt};modeled_parallel_us={mus:.1f}")
+        sp_work = res["bfis"][0] / res["speedann"][0]
+        sp_lat = res["bfis"][1] / res["speedann"][1]
+        sp_h = res["hnsw"][1] / res["speedann"][1]
+        row(f"fig12_speedup_r{tgt}", 0,
+            f"latency_vs_nsg={sp_lat:.2f}x;latency_vs_hnsw={sp_h:.2f}x;"
+            f"work_vs_nsg={sp_work:.2f}x")
+        out[tgt] = res
+    return out
+
+
+def fig13_tail_latency() -> Dict:
+    """Work-proxy percentiles: per-query steps (latency ∝ critical path)."""
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    out = {}
+    for method in ("bfis", "speedann"):
+        _, _, st = run_method(method, g, q, BASE.with_(queue_len=96))
+        steps = np.asarray(st.steps)
+        p50, p90, p99 = (np.percentile(steps, p) for p in (50, 90, 99))
+        out[method] = (p50, p90, p99)
+        row(f"fig13_{method}", 0,
+            f"p50={p50:.0f};p90={p90:.0f};p99={p99:.0f};"
+            f"tail_blowup={p99 / max(p50, 1):.2f}x")
+    return out
+
+
+def fig14_walker_scaling() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    base_steps = None
+    out = {}
+    for w in (1, 2, 4, 8, 16, 32):
+        cfg = BASE.with_(num_walkers=w, m_max=w)
+        _, _, st = run_method("speedann", g, q, cfg)
+        steps = float(np.mean(np.asarray(st.steps)))
+        comps = float(np.mean(np.asarray(st.dist_comps)))
+        base_steps = base_steps or steps
+        out[w] = (steps, comps)
+        row(f"fig14_w{w}", 0,
+            f"global_steps={steps:.1f};comps={comps:.0f};"
+            f"crit_path_speedup={base_steps / steps:.2f}x")
+    return out
+
+
+def fig15_graph_size_scaling() -> Dict:
+    out = {}
+    for n in (2000, 8000, 20000):
+        ds = dataset(n=n, q=32)
+        g = nsg_index(ds)
+        us_b, _, _ = latency_at_recall("bfis", g, ds, BASE, 0.99)
+        us_s, _, _ = latency_at_recall("speedann", g, ds, BASE, 0.99)
+        out[n] = (us_b, us_s)
+        row(f"fig15_n{n}", round(us_s, 1),
+            f"bfis_us={us_b:.1f};speedup={us_b / us_s:.2f}x")
+    return out
+
+
+def fig16_ablation() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    q = jnp.asarray(ds.queries)
+    out = {}
+    for name in ("bfis", "nostaged", "nosync", "adaptive"):
+        cfg = variant(BASE, name)
+        method = "bfis" if name == "bfis" else "speedann"
+        ids, _, st = run_method(method, g, q, cfg)
+        r = recall_at_k(np.asarray(ids), ds.gt_ids, K)
+        s = st.summary()
+        out[name] = dict(s, recall=r)
+        row(f"fig16_{name}", 0,
+            f"steps={s['steps']:.1f};comps={s['dist_comps']:.0f};"
+            f"dups={s['dup_comps']:.0f};recall={r:.3f}")
+    return out
+
+
+def fig17_neighbor_grouping() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    # degree-centric regrouping with 1% top level (paper: 0.1% at 100M)
+    g2, _perm = group_by_indegree(np.asarray(g.nbrs), np.asarray(g.vectors),
+                                  medoid=int(g.medoid), top_fraction=0.01)
+    q = jnp.asarray(ds.queries)
+
+    # search returns REGROUPED ids; map back through the permutation
+    ids_new, _, st = search_speedann_batch(g2, q, BASE)
+    ids_new = np.asarray(ids_new)
+    safe = np.minimum(ids_new, g2.n_nodes - 1)
+    ids = np.where(ids_new < g2.n_nodes, np.asarray(_perm)[safe], -1)
+    r = recall_at_k(ids, ds.gt_ids, K)
+    # hit fraction estimated from frontier contents (hot vertices rank low)
+    hot = np.mean(ids_new < g2.n_top)
+    # access-mass estimate: expansions visit vertices ∝ in-degree, so the
+    # top level's share of total in-degree approximates the fraction of
+    # expansions served by the flattened (1-burst) layout
+    nb = np.asarray(g2.nbrs)
+    indeg = np.bincount(nb[nb < g2.n_nodes], minlength=g2.n_nodes)
+    mass = indeg[:g2.n_top].sum() / max(indeg.sum(), 1)
+    row("fig17_grouping", 0,
+        f"recall={r:.3f};result_hit_frac≈{hot:.3f};"
+        f"expansion_mass≈{mass:.3f};n_top={g2.n_top}")
+    return {"recall": r, "hot": float(hot), "mass": float(mass)}
+
+
+def tab02_sync_comparison() -> Dict:
+    ds = dataset()
+    g = nsg_index(ds)
+    out = {}
+    for name in ("nosync", "adaptive"):
+        cfg = variant(BASE, name)
+        us, r, stats = latency_at_recall("speedann", g, ds, cfg, 0.9)
+        out[name] = (us, stats.get("dist_comps", 0))
+        row(f"tab02_{name}", round(us, 1),
+            f"comps={stats.get('dist_comps', 0):.0f};recall>=0.9")
+    return out
+
+
+def tab04_gpu() -> Dict:
+    row("tab04_gpu", 0,
+        "N/A:no GPU in container;paper compares Faiss-GPU IVFFlat — see "
+        "EXPERIMENTS.md for the qualitative mapping")
+    return {}
+
+
+ALL = [fig05_convergence, fig06_distance_comps, fig07_width_sweep,
+       fig08_staged, fig09_sync_frequency, fig12_latency_vs_baselines,
+       fig13_tail_latency, fig14_walker_scaling, fig15_graph_size_scaling,
+       fig16_ablation, fig17_neighbor_grouping, tab02_sync_comparison,
+       tab04_gpu]

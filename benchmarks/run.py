@@ -1,0 +1,50 @@
+"""Benchmark harness entry point.
+
+``PYTHONPATH=src python -m benchmarks.run [--only NAME]``
+
+Prints ``name,us_per_call,derived`` CSV, one block per paper table/figure
+(see benchmarks/paper_figs.py) plus the roofline table from the dry-run
+artifacts (benchmarks/roofline_report.py).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figs
+    from benchmarks import roofline_report
+
+    print("name,us_per_call,derived")
+    failures = []
+    for fn in paper_figs.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {fn.__name__} done in {time.time() - t0:.0f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures.append(fn.__name__)
+            print(f"{fn.__name__},nan,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if not args.skip_roofline and not args.only:
+        roofline_report.render()
+        roofline_report.kernel_rooflines()
+    if failures:
+        print(f"# FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

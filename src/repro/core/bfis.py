@@ -1,0 +1,207 @@
+"""Best-first search (Algorithm 1) and single-queue top-M relaxation (§4.1).
+
+``search_topm`` is the bulk-synchronous form of Speed-ANN's parallel neighbor
+expansion: each step selects the top-M unchecked candidates from ONE shared
+frontier and expands them simultaneously.  ``M=1`` is exactly the paper's
+BFiS (the NSG/HNSW search kernel); larger M exposes path-wise parallelism;
+``staged=True`` doubles M every ``stage_every`` steps (§4.2).
+
+The full Algorithm 3 (private walker queues + redundant-expansion-aware lazy
+synchronization) lives in ``speedann.py``; this module is both the baseline
+and the building block.
+
+All functions are single-query and meant to be ``jax.vmap``-ed over a query
+batch (a vmapped while_loop runs until the slowest query converges; bodies
+are no-ops for converged queries so counters stay exact).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SearchConfig
+from repro.core import queue as fq
+from repro.core import visited as vs
+from repro.core.graph import (PaddedCSR, fetch_neighbor_vectors,
+                              gather_neighbor_ids)
+from repro.core.metrics import SearchStats
+
+# dist_fn(graph, active_ids (M,), nbr_ids (M,R), query (d,)) -> (M,R) sq-L2
+DistFn = Callable[[PaddedCSR, jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+def dist_l2(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
+            q: jax.Array) -> jax.Array:
+    """Reference squared-L2 distance via the two-level vector fetch."""
+    vecs = fetch_neighbor_vectors(graph, active_ids, nbr_ids)
+    diff = vecs.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def expand(
+    graph: PaddedCSR,
+    q: jax.Array,
+    frontier: fq.Frontier,
+    visited: vs.Visited,
+    m_max: int,
+    m: jax.Array | int,
+    dist_fn: DistFn = dist_l2,
+) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
+    """One neighbor-expansion round (Algorithm 1 lines 6–13, width m).
+
+    Returns (frontier', visited', update_position, n_distance_comps).
+    """
+    frontier, active_ids, active_valid = fq.select_unchecked(
+        frontier, m_max, m)
+    nbrs = gather_neighbor_ids(graph, active_ids)          # (m_max, R)
+    flat = nbrs.reshape(-1)
+    valid = (flat < graph.n_nodes) & jnp.repeat(active_valid, graph.degree)
+    visited, fresh = vs.check_and_insert(visited, flat, valid)
+    dists = dist_fn(graph, active_ids, nbrs, q).reshape(-1)
+    dists = jnp.where(fresh, dists, jnp.inf)
+    cand_ids = jnp.where(fresh, flat, fq.INVALID_ID)
+    frontier, up_pos, _ = fq.insert(frontier, cand_ids, dists)
+    return frontier, visited, up_pos, jnp.sum(fresh).astype(jnp.int32)
+
+
+class _TopMState(NamedTuple):
+    frontier: fq.Frontier
+    visited: vs.Visited
+    stats: SearchStats
+
+
+def _init_state(
+    graph: PaddedCSR, q: jax.Array, cfg: SearchConfig,
+    start: Optional[jax.Array], dist_fn: DistFn,
+) -> _TopMState:
+    frontier = fq.make_frontier(cfg.queue_len)
+    visited = vs.make_visited(cfg.visited_mode, graph.n_nodes, cfg.hash_bits)
+    s = graph.medoid if start is None else start.astype(jnp.int32)
+    visited, _ = vs.check_and_insert(
+        visited, s[None], jnp.ones((1,), bool))
+    v = graph.vectors[s].astype(jnp.float32)
+    d0 = jnp.sum((v - q.astype(jnp.float32)) ** 2)[None]
+    frontier, _, _ = fq.insert(frontier, s[None], d0)
+    stats = SearchStats.zero()._replace(dist_comps=jnp.int32(1))
+    return _TopMState(frontier, visited, stats)
+
+
+def staged_m(step: jax.Array, cfg: SearchConfig) -> jax.Array:
+    """§4.2 staging function: M doubles every ``stage_every`` steps."""
+    if not cfg.staged:
+        return jnp.int32(cfg.m_max)
+    expo = jnp.minimum(step // cfg.stage_every, 30).astype(jnp.int32)
+    return jnp.minimum(jnp.left_shift(jnp.int32(1), expo),
+                       jnp.int32(cfg.m_max))
+
+
+def search_topm(
+    graph: PaddedCSR,
+    q: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: DistFn = dist_l2,
+) -> Tuple[jax.Array, jax.Array, SearchStats]:
+    """Single-queue top-M parallel-neighbor-expansion search (one query).
+
+    ``cfg.m_max == 1`` reproduces BFiS / Algorithm 1 exactly.
+    Returns (ids (k,), dists (k,), stats).
+    """
+    st = _init_state(graph, q, cfg, start, dist_fn)
+
+    def cond(s: _TopMState):
+        return fq.has_unchecked(s.frontier) & (s.stats.steps < cfg.max_steps)
+
+    def body(s: _TopMState):
+        live = fq.has_unchecked(s.frontier)
+        m = staged_m(s.stats.steps, cfg)
+        frontier, visited, _, n = expand(
+            graph, q, s.frontier, s.visited, cfg.m_max, m, dist_fn)
+        stats = s.stats._replace(
+            steps=s.stats.steps + live.astype(jnp.int32),
+            local_steps=s.stats.local_steps
+            + jnp.minimum(m, jnp.int32(cfg.m_max)) * live.astype(jnp.int32),
+            dist_comps=s.stats.dist_comps + n,
+            crit_rounds=s.stats.crit_rounds + live.astype(jnp.int32),
+        )
+        return _TopMState(frontier, visited, stats)
+
+    st = jax.lax.while_loop(cond, body, st)
+    ids, dists = fq.results(st.frontier, cfg.k)
+    return ids, dists, st.stats
+
+
+def search_topm_batch(
+    graph: PaddedCSR,
+    queries: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: DistFn = dist_l2,
+):
+    """vmapped ``search_topm`` over a (B, d) query batch."""
+    fn = functools.partial(search_topm, graph, cfg=cfg, dist_fn=dist_fn)
+    if start is None:
+        return jax.vmap(lambda qq: fn(qq))(queries)
+    return jax.vmap(lambda qq, ss: fn(qq, start=ss))(queries, start)
+
+
+def bfis_search_batch(graph, queries, cfg: SearchConfig, **kw):
+    """Algorithm 1 (the NSG baseline): top-M search with M=1, no staging."""
+    return search_topm_batch(
+        graph, queries, cfg.with_(m_max=1, staged=False), **kw)
+
+
+# ---------------------------------------------------------------------------
+# HNSW-style hierarchical search (the paper's second baseline)
+# ---------------------------------------------------------------------------
+
+def greedy_descent(
+    level_nbrs: jax.Array, vectors: jax.Array, entry: jax.Array,
+    q: jax.Array, max_hops: int = 64,
+) -> jax.Array:
+    """Greedy walk on one upper level: hop to the closest neighbor until a
+    local minimum (HNSW's ef=1 upper-level search)."""
+    n = vectors.shape[0]
+    qf = q.astype(jnp.float32)
+
+    def dist_of(i):
+        v = vectors[jnp.minimum(i, n - 1)].astype(jnp.float32)
+        return jnp.where(i < n, jnp.sum((v - qf) ** 2), jnp.inf)
+
+    def cond(carry):
+        cur, cur_d, moved, hops = carry
+        return moved & (hops < max_hops)
+
+    def body(carry):
+        cur, cur_d, _, hops = carry
+        nb = level_nbrs[cur]                        # (R_l,)
+        vecs = vectors[jnp.minimum(nb, n - 1)].astype(jnp.float32)
+        d = jnp.sum((vecs - qf[None, :]) ** 2, axis=-1)
+        d = jnp.where(nb < n, d, jnp.inf)
+        j = jnp.argmin(d)
+        better = d[j] < cur_d
+        return (jnp.where(better, nb[j], cur),
+                jnp.where(better, d[j], cur_d),
+                better, hops + 1)
+
+    cur, _, _, _ = jax.lax.while_loop(
+        cond, body, (entry, dist_of(entry), jnp.bool_(True), jnp.int32(0)))
+    return cur
+
+
+def hnsw_search_batch(index, queries: jax.Array, cfg: SearchConfig):
+    """HNSW baseline: greedy descent through upper levels, BFiS at level 0."""
+    base = index.base
+
+    def one(q):
+        cur = jnp.asarray(index.entry, jnp.int32)
+        for lvl in range(len(index.level_nbrs) - 1, -1, -1):
+            cur = greedy_descent(index.level_nbrs[lvl], base.vectors, cur, q)
+        return cur
+
+    starts = jax.vmap(one)(queries)
+    return search_topm_batch(
+        base, queries, cfg.with_(m_max=1, staged=False), start=starts)

@@ -1,0 +1,230 @@
+"""Similarity-graph index construction.
+
+The paper builds on NSG's construction ("not the focus of this work", §2.2) —
+we therefore provide faithful-but-compact builders so the system is complete:
+
+* blocked exact kNN (JAX matmul-based; also used for ground truth),
+* NSG/Vamana-style α-pruned graph (monotonic-RNG heuristic, two passes from
+  the medoid, reverse-edge augmentation) — the "NSG" index,
+* a hierarchical (HNSW-style) index: geometric level assignment, per-level
+  pruned graphs, greedy upper-level descent — the "HNSW" baseline index.
+
+Construction is offline; numpy is acceptable here (the paper's own builders
+are offline C++).  Search-time code never calls into this module.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import PaddedCSR, compute_medoid, make_padded_csr
+
+
+# ---------------------------------------------------------------------------
+# Exact kNN (blocked brute force) — ground truth + kNN-graph seed
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _l2_block(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared L2 distances (B, N) between query block and data block."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=1, keepdims=True)
+    x2 = jnp.sum(x * x, axis=1)
+    return q2 + x2[None, :] - 2.0 * (q @ x.T)
+
+
+def exact_knn(
+    data: np.ndarray, queries: np.ndarray, k: int, block: int = 2048
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact k nearest neighbors of ``queries`` within ``data``.
+
+    Returns (ids (Q, k) int32, dists (Q, k) float32) sorted ascending.
+    """
+    data_j = jnp.asarray(data)
+    out_ids, out_d = [], []
+    for s in range(0, queries.shape[0], block):
+        q = jnp.asarray(queries[s:s + block])
+        d = _l2_block(q, data_j)                      # (b, N)
+        d_top, i_top = jax.lax.top_k(-d, k)
+        out_ids.append(np.asarray(i_top, np.int32))
+        out_d.append(np.asarray(-d_top, np.float32))
+    return np.concatenate(out_ids), np.concatenate(out_d)
+
+
+def knn_graph(data: np.ndarray, k: int, block: int = 2048) -> np.ndarray:
+    """(N, k) kNN graph excluding self-edges."""
+    ids, _ = exact_knn(data, data, k + 1, block)
+    n = data.shape[0]
+    rows = []
+    for i in range(n):
+        row = ids[i][ids[i] != i][:k]
+        if row.shape[0] < k:  # duplicate points: pad with sentinel
+            row = np.concatenate([row, np.full(k - row.shape[0], n, np.int32)])
+        rows.append(row)
+    return np.stack(rows).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# NSG/Vamana-style α-pruned graph
+# ---------------------------------------------------------------------------
+
+def _robust_prune(
+    data: np.ndarray, node: int, cand_ids: np.ndarray, cand_d: np.ndarray,
+    degree: int, alpha: float,
+) -> np.ndarray:
+    """Monotonic-RNG α-prune: greedily keep the closest candidate c, then
+    drop every remaining candidate c' with α·d(c, c') ≤ d(node, c')."""
+    order = np.argsort(cand_d, kind="stable")
+    cand_ids = cand_ids[order]
+    cand_d = cand_d[order]
+    keep: List[int] = []
+    alive = np.ones(cand_ids.shape[0], bool)
+    alive &= cand_ids != node
+    for i in range(cand_ids.shape[0]):
+        if not alive[i]:
+            continue
+        c = int(cand_ids[i])
+        keep.append(c)
+        if len(keep) >= degree:
+            break
+        # occlusion rule: drop c' when c is much closer to c' than node is
+        diff = data[cand_ids] - data[c]
+        d_cc = np.sqrt(np.maximum(np.einsum("ij,ij->i", diff, diff), 0.0))
+        alive = alive & ~(alpha * d_cc <= cand_d)
+        alive[i] = False
+    return np.asarray(keep, np.int32)
+
+
+def _greedy_search_np(
+    data: np.ndarray, nbrs: List[np.ndarray], start: int, q: np.ndarray,
+    ef: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side best-first search used during construction (Vamana pass)."""
+    import heapq
+    d0 = float(np.sum((data[start] - q) ** 2))
+    cand = [(d0, start)]
+    visited = {start}
+    best: List[Tuple[float, int]] = [(-d0, start)]
+    while cand:
+        d, v = heapq.heappop(cand)
+        if -best[0][0] < d and len(best) >= ef:
+            break
+        for u in nbrs[v]:
+            u = int(u)
+            if u in visited or u >= data.shape[0]:
+                continue
+            visited.add(u)
+            du = float(np.sum((data[u] - q) ** 2))
+            if len(best) < ef or du < -best[0][0]:
+                heapq.heappush(cand, (du, u))
+                heapq.heappush(best, (-du, u))
+                if len(best) > ef:
+                    heapq.heappop(best)
+    out = sorted([(-negd, u) for negd, u in best])
+    ids = np.asarray([u for _, u in out], np.int32)
+    ds = np.asarray([d for d, _ in out], np.float32)
+    return ids, ds
+
+
+def build_nsg(
+    data: np.ndarray,
+    degree: int = 32,
+    knn_k: int = 32,
+    alpha: float = 1.2,
+    ef_construction: int = 64,
+    seed: int = 0,
+    passes: int = 2,
+) -> PaddedCSR:
+    """Vamana/NSG-style construction: kNN seed + α-pruned refinement passes
+    from the medoid + reverse-edge augmentation with re-pruning."""
+    n = data.shape[0]
+    data = np.asarray(data, np.float32)
+    knn = knn_graph(data, knn_k)
+    nbrs: List[np.ndarray] = [knn[i][knn[i] < n] for i in range(n)]
+    medoid = compute_medoid(data)
+    rng = np.random.RandomState(seed)
+
+    for p in range(passes):
+        a = 1.0 if p == 0 else alpha
+        order = rng.permutation(n)
+        for node in order:
+            cand_ids, cand_d = _greedy_search_np(
+                data, nbrs, medoid, data[node], ef_construction)
+            # include current neighbors as candidates
+            cur = nbrs[node]
+            allc = np.unique(np.concatenate([cand_ids, cur]))
+            allc = allc[allc != node]
+            diff = data[allc] - data[node]
+            d = np.sqrt(np.maximum(np.einsum("ij,ij->i", diff, diff), 0.0))
+            pruned = _robust_prune(data, node, allc, d, degree, a)
+            nbrs[node] = pruned
+            # reverse edges with degree cap + re-prune
+            for u in pruned:
+                u = int(u)
+                if node in nbrs[u]:
+                    continue
+                lst = np.concatenate([nbrs[u], [node]])
+                if lst.shape[0] > degree:
+                    diff = data[lst] - data[u]
+                    d_u = np.sqrt(np.maximum(
+                        np.einsum("ij,ij->i", diff, diff), 0.0))
+                    lst = _robust_prune(data, u, lst, d_u, degree, a)
+                nbrs[u] = lst.astype(np.int32)
+
+    padded = np.full((n, degree), n, np.int32)
+    for i in range(n):
+        m = min(len(nbrs[i]), degree)
+        padded[i, :m] = nbrs[i][:m]
+    return make_padded_csr(padded, data, medoid=medoid)
+
+
+# ---------------------------------------------------------------------------
+# HNSW-style hierarchical index (the paper's second baseline)
+# ---------------------------------------------------------------------------
+
+class HNSWIndex(NamedTuple):
+    base: PaddedCSR                 # level-0 graph (searched with BFiS)
+    level_nbrs: Tuple[jax.Array, ...]   # per upper level: (N, R_l) int32
+    level_nodes: Tuple[jax.Array, ...]  # per upper level: member node ids
+    entry: int
+
+
+def build_hnsw(
+    data: np.ndarray,
+    degree: int = 32,
+    upper_degree: int = 16,
+    ml: float = 0.36,                # 1/ln(M) with M=16
+    seed: int = 0,
+    alpha: float = 1.2,
+) -> HNSWIndex:
+    """Simplified HNSW: geometric level sampling; each upper level is an
+    α-pruned kNN graph over its members; level 0 reuses the NSG builder."""
+    n = data.shape[0]
+    rng = np.random.RandomState(seed)
+    levels = np.minimum(
+        (-np.log(np.maximum(rng.uniform(size=n), 1e-12)) * ml).astype(int), 6)
+    base = build_nsg(data, degree=degree, alpha=alpha, seed=seed, passes=2)
+    level_nbrs, level_nodes = [], []
+    max_level = int(levels.max())
+    entry = int(np.argmax(levels))
+    for lvl in range(1, max_level + 1):
+        members = np.where(levels >= lvl)[0].astype(np.int32)
+        if members.shape[0] < 2:
+            break
+        sub = data[members]
+        k = min(upper_degree, members.shape[0] - 1)
+        sub_knn = knn_graph(sub, k)
+        # map back to global ids, pad with n
+        g = np.where(sub_knn < members.shape[0], members[np.minimum(
+            sub_knn, members.shape[0] - 1)], n).astype(np.int32)
+        full = np.full((n, upper_degree), n, np.int32)
+        full[members, :k] = g
+        level_nbrs.append(jnp.asarray(full))
+        level_nodes.append(jnp.asarray(members))
+    return HNSWIndex(base=base, level_nbrs=tuple(level_nbrs),
+                     level_nodes=tuple(level_nodes), entry=entry)

@@ -1,0 +1,39 @@
+"""Search-quality and search-work metrics (paper §2.1 Eq. 1, §5 profiling)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def recall_at_k(found_ids: np.ndarray, gt_ids: np.ndarray, k: int) -> float:
+    """Recall@K (Eq. 1): |found ∩ true| / K, averaged over queries."""
+    found = np.asarray(found_ids)[:, :k]
+    gt = np.asarray(gt_ids)[:, :k]
+    hits = 0
+    for f, g in zip(found, gt):
+        hits += len(set(int(x) for x in f) & set(int(x) for x in g))
+    return hits / (found.shape[0] * k)
+
+
+class SearchStats(NamedTuple):
+    """Per-query work counters (paper Figures 5–9, 16, 18)."""
+    steps: jax.Array          # global (convergence) steps taken
+    local_steps: jax.Array    # walker-local steps summed over walkers
+    dist_comps: jax.Array     # distance computations (incl. duplicates)
+    dup_comps: jax.Array      # duplicates across walkers (loose-map cost)
+    syncs: jax.Array          # global synchronizations (queue merges)
+    # critical-path expansions: sequential rounds (walkers run in parallel
+    # within a round) — the latency model for W-core/W-device hardware
+    crit_rounds: jax.Array
+
+    @staticmethod
+    def zero():
+        z = jnp.zeros((), jnp.int32)
+        return SearchStats(z, z, z, z, z, z)
+
+    def summary(self) -> dict:
+        return {k: float(np.mean(np.asarray(v)))
+                for k, v in self._asdict().items()}

@@ -1,0 +1,196 @@
+"""Bounded sorted frontier ("priority queue S" of Algorithm 1/3).
+
+The paper's queue is a capacity-L array kept sorted by distance, supporting:
+  * insert a batch of candidates, dedup by id, truncate to L   (Line 13/19)
+  * select + mark the first M unchecked entries                (Line 6/12)
+  * report the *update position* of an insertion               (§4.3)
+
+All ops are fixed-shape and jit/vmap-friendly.  Sort order is (dist, id)
+ascending; empty slots carry dist=+inf / id=INT32_MAX so they sort last.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INVALID_ID = jnp.int32(2**31 - 1)
+INF = jnp.float32(jnp.inf)
+
+
+class Frontier(NamedTuple):
+    ids: jax.Array      # (L,) int32, INVALID_ID for empty slots
+    dists: jax.Array    # (L,) float32, +inf for empty slots
+    checked: jax.Array  # (L,) bool, True for empty slots (never selectable)
+
+
+def make_frontier(capacity: int) -> Frontier:
+    return Frontier(
+        ids=jnp.full((capacity,), INVALID_ID, jnp.int32),
+        dists=jnp.full((capacity,), INF, jnp.float32),
+        checked=jnp.ones((capacity,), bool),
+    )
+
+
+def frontier_valid(f: Frontier) -> jax.Array:
+    return f.ids != INVALID_ID
+
+
+def _sort_by(keys1, keys2, *payload):
+    """Stable co-sort by (keys1, keys2) ascending."""
+    out = jax.lax.sort((keys1, keys2) + tuple(payload), num_keys=2,
+                       is_stable=True)
+    return out
+
+
+def insert(
+    f: Frontier, new_ids: jax.Array, new_dists: jax.Array
+) -> Tuple[Frontier, jax.Array, jax.Array]:
+    """Merge candidates into the frontier.
+
+    Candidates with id >= INVALID_ID or dist == +inf are ignored.  Duplicate
+    ids collapse to a single entry, preferring an existing (possibly checked)
+    queue entry over a fresh one, so a vertex is never re-expanded after a
+    merge (the paper's eventual-consistency guarantee, §4.4).
+
+    Returns ``(frontier', update_position, n_inserted)`` where
+    ``update_position`` is the best (lowest) rank among surviving *new*
+    entries, saturating at L when nothing improved — the §4.3 sync metric.
+    """
+    cap = f.ids.shape[0]
+    new_ids = new_ids.astype(jnp.int32)
+    new_dists = new_dists.astype(jnp.float32)
+    bad = (new_ids < 0) | (new_ids == INVALID_ID) | ~jnp.isfinite(new_dists)
+    new_ids = jnp.where(bad, INVALID_ID, new_ids)
+    new_dists = jnp.where(bad, INF, new_dists)
+
+    ids = jnp.concatenate([f.ids, new_ids])
+    dists = jnp.concatenate([f.dists, new_dists])
+    checked = jnp.concatenate(
+        [f.checked, jnp.zeros(new_ids.shape, bool)])
+    is_new = jnp.concatenate(
+        [jnp.zeros(f.ids.shape, jnp.int32), jnp.ones(new_ids.shape, jnp.int32)])
+
+    # Pass 1: group by id (old entries first within a group), drop duplicates.
+    ids, is_new, dists, checked8 = _sort_by(
+        ids, is_new, dists, checked.astype(jnp.int32))
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (ids[1:] == ids[:-1]) & (ids[1:] != INVALID_ID)])
+    ids = jnp.where(dup, INVALID_ID, ids)
+    dists = jnp.where(dup, INF, dists)
+
+    # Pass 2: re-sort by (dist, id); truncate to capacity.
+    dists, ids, checked8, is_new = _sort_by(dists, ids, checked8, is_new)
+    kept = Frontier(ids=ids[:cap], dists=dists[:cap],
+                    checked=(checked8[:cap] == 1) | (ids[:cap] == INVALID_ID))
+
+    rank = jnp.arange(ids.shape[0], dtype=jnp.int32)
+    surviving_new = (is_new == 1) & (ids != INVALID_ID) & (rank < cap)
+    update_pos = jnp.min(jnp.where(surviving_new, rank, cap))
+    n_inserted = jnp.sum(surviving_new).astype(jnp.int32)
+    return kept, update_pos.astype(jnp.int32), n_inserted
+
+
+def select_unchecked(
+    f: Frontier, m_max: int, m: jax.Array | int | None = None
+) -> Tuple[Frontier, jax.Array, jax.Array]:
+    """Select and mark-checked the first ``m`` unchecked entries (Line 6/12).
+
+    ``m_max`` is the static slot count; ``m`` (traced, <= m_max) masks the
+    dynamic expansion width for staged search.  Returns
+    ``(frontier', active_ids (m_max,), active_valid (m_max,) bool)``;
+    inactive slots carry INVALID_ID.
+    """
+    if m is None:
+        m = m_max
+    unchecked = ~f.checked & (f.ids != INVALID_ID)
+    # Stable argsort puts unchecked slots first, preserving dist order.
+    order = jnp.argsort(~unchecked, stable=True)
+    sel_pos = order[:m_max]                                  # (m_max,)
+    in_budget = jnp.arange(m_max) < m
+    active_valid = unchecked[sel_pos] & in_budget
+    active_ids = jnp.where(active_valid, f.ids[sel_pos], INVALID_ID)
+    new_checked = f.checked.at[sel_pos].set(
+        f.checked[sel_pos] | active_valid)
+    return f._replace(checked=new_checked), active_ids, active_valid
+
+
+def has_unchecked(f: Frontier) -> jax.Array:
+    return jnp.any(~f.checked & (f.ids != INVALID_ID))
+
+
+def top_k_stable(f: Frontier, k: int) -> jax.Array:
+    """First K entries are all checked — Algorithm 1's convergence test."""
+    idx = jnp.arange(f.ids.shape[0]) < k
+    return ~jnp.any(idx & ~f.checked & (f.ids != INVALID_ID))
+
+
+def results(f: Frontier, k: int) -> Tuple[jax.Array, jax.Array]:
+    """The first K (id, dist) pairs — Algorithm 1 Line 14."""
+    return f.ids[:k], f.dists[:k]
+
+
+# ---------------------------------------------------------------------------
+# Multi-queue (walker) operations — Algorithm 3 Lines 7 and 23
+# ---------------------------------------------------------------------------
+
+def scatter_round_robin(
+    f: Frontier, num_walkers: int, active: jax.Array | int | None = None,
+) -> Frontier:
+    """Divide unchecked candidates among walkers (Line 7).
+
+    Walker w receives the unchecked entries whose *unchecked-rank* ≡ w
+    (mod ``active``) — the paper's even division — plus every checked entry
+    (read-only context so each walker sees current best results).  ``active``
+    (traced, <= num_walkers) is the staged worker count M; walkers >= active
+    receive no work.  Returned frontier is stacked: (W, L).
+    """
+    if active is None:
+        active = num_walkers
+    active = jnp.maximum(jnp.asarray(active, jnp.int32), 1)
+    unchecked = ~f.checked & (f.ids != INVALID_ID)
+    # rank among unchecked, by queue (distance) order
+    ranks = jnp.cumsum(unchecked.astype(jnp.int32)) - 1
+    owner = jnp.where(unchecked, ranks % active, -1)
+
+    def one(w):
+        keep = owner == w
+        # checked entries are shared (read-only) context; unchecked entries go
+        # to their owner only
+        shared = f.checked & (f.ids != INVALID_ID)
+        ids = jnp.where(keep | shared, f.ids, INVALID_ID)
+        dists = jnp.where(keep | shared, f.dists, INF)
+        checked = jnp.where(keep, False, True)
+        # re-sort so each local queue is contiguous / ordered
+        dists, ids, checked8 = _sort_by(dists, ids, checked.astype(jnp.int32))
+        return Frontier(ids=ids, dists=dists,
+                        checked=(checked8 == 1) | (ids == INVALID_ID))
+
+    return jax.vmap(one)(jnp.arange(num_walkers))
+
+
+def merge_frontiers(fs: Frontier) -> Tuple[Frontier, jax.Array]:
+    """Merge stacked walker frontiers (W, L) into a global queue (Line 23).
+
+    Duplicate ids collapse preferring checked entries, so work done by any
+    walker is never repeated globally.  Also returns the number of duplicate
+    entries dropped — a lower bound on cross-walker redundant expansion
+    (the loose-visiting-map cost the paper bounds at <5%, §4.4).
+    """
+    w, cap = fs.ids.shape
+    ids = fs.ids.reshape(-1)
+    dists = fs.dists.reshape(-1)
+    checked = fs.checked.reshape(-1)
+    # group by id; prefer checked (sort key ~checked within id group)
+    not_checked = (~checked).astype(jnp.int32)
+    ids, not_checked, dists = _sort_by(ids, not_checked, dists)
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), (ids[1:] == ids[:-1]) & (ids[1:] != INVALID_ID)])
+    n_dups = jnp.sum(dup).astype(jnp.int32)
+    ids = jnp.where(dup, INVALID_ID, ids)
+    dists = jnp.where(dup, INF, dists)
+    dists, ids, not_checked = _sort_by(dists, ids, not_checked)
+    out = Frontier(ids=ids[:cap], dists=dists[:cap],
+                   checked=(not_checked[:cap] == 0) | (ids[:cap] == INVALID_ID))
+    return out, n_dups

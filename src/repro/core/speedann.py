@@ -1,0 +1,199 @@
+"""Speed-ANN intra-query parallel search — Algorithm 3 + §4.2/§4.3/§4.4.
+
+Structure of one *global step* (outer loop iteration):
+
+  1. scatter: the global queue's unchecked candidates are divided
+     round-robin among the ``M`` active walkers (staged: M doubles every
+     ``stage_every`` global steps up to ``num_walkers``);
+  2. local search: every walker runs a private best-first search on its own
+     bounded queue — no communication with other walkers (collective-free on
+     TPU; lock-free on CPU in the paper);
+  3. CheckMetrics (Algorithm 2): after each local round the mean *update
+     position* ū over active walkers is compared against ``L·R``; when
+     ū ≥ L·R (walkers inserting only near the queue tail ⇒ searching
+     unpromising regions) a merge is triggered;
+  4. merge: local queues collapse into the global queue (dedup, prefer
+     checked); walker visited maps are OR-merged ("eventual consistency",
+     §4.4); counters accumulate.
+
+Walkers here are *vmapped lanes on one device*; ``core.distributed`` lifts
+the same step functions onto a ``shard_map`` walker mesh axis where the merge
+becomes an ``all_gather`` and CheckMetrics a scalar ``psum``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SearchConfig
+from repro.core import queue as fq
+from repro.core import visited as vs
+from repro.core.bfis import DistFn, dist_l2, expand, staged_m
+from repro.core.metrics import SearchStats
+
+
+class _LocalState(NamedTuple):
+    locals_: fq.Frontier      # (W, L) private walker queues
+    visited: vs.Visited       # (W, ...) private visited maps
+    up_pos: jax.Array         # (W,) latest update positions
+    lstep: jax.Array          # () local rounds taken this segment
+    do_merge: jax.Array       # () bool — CheckMetrics flag
+    comps: jax.Array          # () distance computations this segment
+
+
+class _GlobalState(NamedTuple):
+    frontier: fq.Frontier     # (L,) global queue S
+    visited: vs.Visited       # (W, ...) walker visited maps (persist)
+    stats: SearchStats
+
+
+def check_metrics(up_pos: jax.Array, active: jax.Array, cfg: SearchConfig
+                  ) -> jax.Array:
+    """Algorithm 2: ū ≥ L·R over the ``active`` lowest-index walkers."""
+    w = up_pos.shape[0]
+    is_active = jnp.arange(w) < active
+    u_bar = (jnp.sum(jnp.where(is_active, up_pos, 0))
+             / jnp.maximum(jnp.sum(is_active), 1))
+    return u_bar >= cfg.queue_len * cfg.sync_ratio
+
+
+def _local_segment(
+    graph, q, locals_: fq.Frontier, visited: vs.Visited,
+    active: jax.Array, cfg: SearchConfig, dist_fn: DistFn,
+) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
+    """Lines 11–22: collective-free private best-first searches.
+
+    Runs until CheckMetrics fires, every walker exhausts its queue, or the
+    ``local_steps`` budget is hit.  Returns (locals', visited', rounds,
+    comps)."""
+    w = cfg.num_walkers
+    cap = cfg.queue_len
+
+    def cond(s: _LocalState):
+        is_active = jnp.arange(w) < active
+        any_work = jnp.any(
+            jax.vmap(fq.has_unchecked)(s.locals_) & is_active)
+        return (~s.do_merge) & any_work & (s.lstep < cfg.local_steps)
+
+    def body(s: _LocalState):
+        def one(fr, vis):
+            return expand(graph, q, fr, vis, 1, 1, dist_fn)
+        locals2, visited2, up, n = jax.vmap(one)(s.locals_, s.visited)
+        is_active = (jnp.arange(w) < active)
+        had_work = jax.vmap(fq.has_unchecked)(s.locals_) & is_active
+        # walkers with no unchecked candidates saturate at L (stuck)
+        up = jnp.where(had_work, up, cap).astype(jnp.int32)
+        do_merge = check_metrics(up, active, cfg)
+        return _LocalState(
+            locals_=locals2, visited=visited2, up_pos=up,
+            lstep=s.lstep + 1, do_merge=do_merge,
+            comps=s.comps + jnp.sum(jnp.where(had_work, n, 0)))
+
+    init = _LocalState(
+        locals_=locals_, visited=visited,
+        up_pos=jnp.zeros((w,), jnp.int32), lstep=jnp.int32(0),
+        do_merge=jnp.bool_(False), comps=jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, init)
+    return out.locals_, out.visited, out.lstep, out.comps
+
+
+def search_speedann(
+    graph,
+    q: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: DistFn = dist_l2,
+) -> Tuple[jax.Array, jax.Array, SearchStats]:
+    """Full Speed-ANN search for one query (Algorithm 3)."""
+    w, cap = cfg.num_walkers, cfg.queue_len
+
+    frontier = fq.make_frontier(cap)
+    visited0 = vs.make_visited(cfg.visited_mode, graph.n_nodes, cfg.hash_bits)
+    s0 = graph.medoid if start is None else start.astype(jnp.int32)
+    visited0, _ = vs.check_and_insert(visited0, s0[None], jnp.ones((1,), bool))
+    v0 = graph.vectors[s0].astype(jnp.float32)
+    d0 = jnp.sum((v0 - q.astype(jnp.float32)) ** 2)[None]
+    frontier, _, _ = fq.insert(frontier, s0[None], d0)
+    # Expand the starting point once before dividing work, so the first
+    # scatter has a full frontier to distribute (paper Fig. 4: the search
+    # fans out from P's neighbors; without this, NoSync would degenerate to
+    # a single busy walker).
+    frontier, visited0, _, n0 = expand(
+        graph, q, frontier, visited0, 1, 1, dist_fn)
+    # replicate the seed visited map to all walkers (consistent at t=0)
+    visited = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (w,) + t.shape), visited0)
+
+    init = _GlobalState(
+        frontier=frontier, visited=visited,
+        stats=SearchStats.zero()._replace(dist_comps=jnp.int32(1) + n0))
+
+    def cond(s: _GlobalState):
+        return fq.has_unchecked(s.frontier) & (s.stats.steps < cfg.max_steps)
+
+    def body(s: _GlobalState):
+        # invariant: s.visited is OR-merged (all walkers agree) on entry
+        live = fq.has_unchecked(s.frontier)
+        m = staged_m(s.stats.steps, cfg).astype(jnp.int32)
+        m = jnp.minimum(m, w)
+        union_before = vs.popcount(s.visited)
+        # Line 7: divide unchecked candidates among active walkers.
+        locals_ = fq.scatter_round_robin(s.frontier, w, active=m)
+        # Lines 11–22: collective-free local searches + CheckMetrics.
+        locals_, visited, rounds, comps = _local_segment(
+            graph, q, locals_, s.visited, m, cfg, dist_fn)
+        # Line 23: merge local queues into the global queue; §4.4: visited
+        # maps reach eventual consistency here.
+        merged, _ = fq.merge_frontiers(locals_)
+        visited = vs.merge_visited(visited)
+        # cross-walker duplicate computations = work minus union growth
+        n_dups = comps - (vs.popcount(visited) - union_before)
+        stats = s.stats._replace(
+            steps=s.stats.steps + live.astype(jnp.int32),
+            local_steps=s.stats.local_steps + rounds * m,
+            dist_comps=s.stats.dist_comps + comps,
+            dup_comps=s.stats.dup_comps + jnp.maximum(n_dups, 0),
+            syncs=s.stats.syncs + live.astype(jnp.int32),
+            crit_rounds=s.stats.crit_rounds + rounds,
+        )
+        return _GlobalState(frontier=merged, visited=visited, stats=stats)
+
+    out = jax.lax.while_loop(cond, body, init)
+    ids, dists = fq.results(out.frontier, cfg.k)
+    return ids, dists, out.stats
+
+
+def search_speedann_batch(
+    graph,
+    queries: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: DistFn = dist_l2,
+):
+    """vmapped Speed-ANN over a (B, d) query batch."""
+    fn = functools.partial(search_speedann, graph, cfg=cfg, dist_fn=dist_fn)
+    if start is None:
+        return jax.vmap(lambda qq: fn(qq))(queries)
+    return jax.vmap(lambda qq, ss: fn(qq, start=ss))(queries, start)
+
+
+# Named ablation variants (§5.3) ------------------------------------------
+
+def variant(cfg: SearchConfig, name: str) -> SearchConfig:
+    """The paper's §5.3 configurations."""
+    if name == "bfis":               # NSG baseline
+        return cfg.with_(m_max=1, num_walkers=1, staged=False)
+    if name == "edge_parallel":      # NSG-32T: parallel expansion, M=1
+        return cfg.with_(m_max=1, num_walkers=1, staged=False)
+    if name == "nostaged":           # Speed-ANN-NoStaged: fixed M=W
+        return cfg.with_(staged=False)
+    if name == "nosync":             # Speed-ANN-NoSync: all workers start at
+        # once, search independently, merge only at the end (§5.3 (iii))
+        return cfg.with_(staged=False, sync_ratio=2.0,
+                         local_steps=cfg.max_steps)
+    if name == "adaptive":           # Speed-ANN-Adaptive (the paper's method)
+        return cfg
+    raise ValueError(name)

@@ -1,0 +1,155 @@
+"""Visited-set structures (§4.4, "loosely synchronized visiting map").
+
+Three modes, trading exactness for scale, all with the paper's correctness
+model: a false-negative lookup merely causes a duplicate distance computation
+(benign — the queue merge dedups); a false *positive* is never produced.
+
+* ``bitmap`` — exact dense boolean array over the N graph vertices.  Per
+  walker, per query.  The paper's shared CPU bitvector with benign races maps
+  to *per-walker* maps that are OR-merged only at global syncs ("eventual
+  consistency"); between syncs walkers may duplicate each other's work, which
+  we measure (paper claims <5%).
+* ``hash``  — fixed 2**bits open-addressed set with bounded linear probing.
+  Scales to billion-node graphs (memory independent of N).  Probe losses and
+  in-batch scatter races cause duplicate computations only (benign, and the
+  direct TPU analog of the paper's fence-free racy updates).
+* ``loose`` — no structure at all; dedup happens only against the frontier
+  at insert time.  Maximum duplicates, zero memory; useful as an ablation
+  (the paper's "no visiting map" extreme).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Visited:
+    table: jax.Array    # bitmap: (N,) bool   | hash: (2**bits,) int32 keys
+    mode_bitmap: bool = dataclasses.field(metadata=dict(static=True))
+    mask: int = dataclasses.field(metadata=dict(static=True))  # hash: 2**b - 1
+
+    def _replace(self, **kw) -> "Visited":
+        return dataclasses.replace(self, **kw)
+
+
+_EMPTY = jnp.int32(-1)
+_PROBES = 8
+
+
+def make_visited(mode: str, n_nodes: int, hash_bits: int = 14) -> Visited:
+    if mode == "bitmap":
+        return Visited(jnp.zeros((n_nodes,), bool), True, 0)
+    if mode == "hash":
+        size = 1 << hash_bits
+        return Visited(jnp.full((size,), _EMPTY, jnp.int32), False, size - 1)
+    if mode == "loose":
+        return Visited(jnp.full((1,), _EMPTY, jnp.int32), False, 0)
+    raise ValueError(f"unknown visited mode {mode!r}")
+
+
+def _hash(ids: jax.Array, mask: int) -> jax.Array:
+    # Knuth multiplicative hash on int32 ids.
+    h = (ids.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(16)
+    return (h ^ ids.astype(jnp.uint32)).astype(jnp.int32) & mask
+
+
+def check_and_insert(
+    v: Visited, ids: jax.Array, valid: jax.Array
+) -> Tuple[Visited, jax.Array]:
+    """Batch test-and-set.  Returns (visited', fresh_mask).
+
+    ``fresh_mask[i]`` is True when ids[i] was valid and *not* previously
+    marked; those are the ids whose distances must be computed this step.
+    """
+    if v.mode_bitmap:
+        n = v.table.shape[0]
+        safe = jnp.clip(ids, 0, n - 1)
+        already = v.table[safe] & valid
+        fresh = valid & ~already
+        # in-batch duplicates: keep first occurrence only (exact dedup)
+        fresh = fresh & _first_occurrence(ids, fresh)
+        # scatter-max (commutative OR): duplicate indices in the batch must
+        # not be able to erase a concurrent True write (.set is order-
+        # nondeterministic with duplicates)
+        table = v.table.at[safe].max(fresh)
+        return v._replace(table=table), fresh
+
+    if v.mask == 0:  # loose mode: no memory; only in-batch dedup
+        fresh = valid & _first_occurrence(ids, valid)
+        return v, fresh
+
+    # hash mode: bounded linear probing.
+    table = v.table
+    found = jnp.zeros(ids.shape, bool)
+    inserted = jnp.zeros(ids.shape, bool)
+    slot = _hash(ids, v.mask)
+    for _ in range(_PROBES):
+        cur = table[slot]
+        # a lane that already claimed its slot must not read its own insert
+        # back as a pre-existing hit
+        hit = (cur == ids) & valid & ~inserted
+        empty = (cur == _EMPTY) & valid & ~found & ~inserted
+        # try to claim empty slots; duplicate-index scatter races are benign
+        # (loser reads back a different key and retries next probe round)
+        table = table.at[jnp.where(empty, slot, 0)].set(
+            jnp.where(empty, ids, table[0]))
+        claimed = empty & (table[slot] == ids)
+        inserted = inserted | claimed
+        found = found | hit
+        done = found | inserted
+        slot = jnp.where(done, slot, (slot + 1) & v.mask)
+    # ids that neither hit nor found a slot are treated as fresh (duplicate
+    # compute possible — benign)
+    fresh = valid & ~found
+    fresh = fresh & _first_occurrence(ids, fresh)
+    return v._replace(table=table), fresh
+
+
+def _first_occurrence(ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mask keeping only the first occurrence of each id among valid slots."""
+    n = ids.shape[0]
+    eq = ids[None, :] == ids[:, None]                 # (n, n)
+    earlier = jnp.tril(jnp.ones((n, n), bool), k=-1)  # j < i
+    dup_of_earlier = jnp.any(eq & earlier & valid[None, :], axis=1)
+    return valid & ~dup_of_earlier
+
+
+def popcount(v: Visited) -> jax.Array:
+    """Number of marked vertices in walker 0's table.
+
+    On an OR-merged stacked map this is the exact union size (bitmap mode) or
+    table occupancy (hash mode; slot losses undercount — benign).  Used to
+    measure cross-walker duplicate computations:
+    ``dups = sum(per-walker comps) - (union_after - union_before)``.
+    """
+    t0 = v.table[0] if v.table.ndim > 1 else v.table
+    if v.mode_bitmap:
+        return jnp.sum(t0).astype(jnp.int32)
+    if v.mask == 0:
+        return jnp.int32(0)
+    return jnp.sum(t0 != _EMPTY).astype(jnp.int32)
+
+
+def merge_visited(vs: Visited) -> Visited:
+    """OR-merge stacked walker visited maps (leading axis W) at a global sync.
+
+    Bitmap: exact OR.  Hash: keep walker 0's table and re-insert others'
+    non-empty keys (best effort; losses are benign).  Loose: no-op.
+    """
+    if vs.mode_bitmap:
+        merged = jnp.any(vs.table, axis=0)
+        w = vs.table.shape[0]
+        return Visited(jnp.broadcast_to(merged, vs.table.shape), True, 0)
+    if vs.mask == 0:
+        return vs
+    # hash: fold tables together; occupied slots from any walker win.
+    def fold(acc, t):
+        take = (acc == _EMPTY) & (t != _EMPTY)
+        return jnp.where(take, t, acc), None
+    merged, _ = jax.lax.scan(fold, vs.table[0], vs.table[1:])
+    return Visited(jnp.broadcast_to(merged, vs.table.shape), False, vs.mask)

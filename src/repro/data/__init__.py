@@ -1,0 +1,2 @@
+from repro.data.vectors import make_vector_dataset, VectorDataset  # noqa: F401
+from repro.data.tokens import TokenStream, synthetic_batches  # noqa: F401

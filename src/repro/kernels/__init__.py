@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   l2dist  — fused gather + squared-L2 distance (neighbor expansion)
+#   bitonic — VMEM bitonic co-sort (frontier merge / queue maintenance)
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
+from repro.kernels.ops import l2dist, make_dist_fn, sort_pairs, topl_merge  # noqa: F401

@@ -1,0 +1,139 @@
+"""Fused gather + squared-L2 distance Pallas TPU kernel.
+
+This is the paper's compute hot spot (Challenges II & IV): the neighbor
+expansion gathers ≤ M·R feature vectors at data-dependent addresses and
+reduces each against the query.  On CPU the paper attacks it with neighbor
+grouping + prefetch; the TPU-native form is a *fused dynamic-gather +
+distance* kernel so gathered rows never round-trip through HBM:
+
+* ``rowgather`` variant — scalar-prefetched candidate ids drive the
+  ``BlockSpec`` index_map of the embedding table, so the pipeline streams
+  exactly the needed (1, d) rows HBM→VMEM while the VPU reduces the previous
+  row.  This is the canonical Pallas dynamic-gather idiom; Mosaic
+  double-buffers the row fetches automatically.
+* ``dma`` variant — the table stays unblocked (``pl.ANY`` memory space); the
+  kernel issues G explicit row DMAs into a VMEM scratch tile, then computes
+  ``‖x‖² − 2 x·q + ‖q‖²`` for the whole tile with an MXU matvec.  G=8 rows
+  amortize grid overhead and give the MXU a (G, d)×(d,) contraction; this is
+  the layout the §Perf iterations tune.
+
+Distances use the expanded form with f32 accumulation; padded ids (>= N)
+return +inf.  Both variants validate against ``ref.l2dist_ref`` in
+interpret mode (CPU) — see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# Variant 1: scalar-prefetch row gather
+# ---------------------------------------------------------------------------
+
+def _rowgather_kernel(ids_ref, row_ref, q_ref, out_ref, *, n_nodes: int):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    sid = ids_ref[b, c]
+    row = row_ref[0, :].astype(jnp.float32)
+    q = q_ref[0, :].astype(jnp.float32)
+    diff = row - q
+    dist = jnp.sum(diff * diff)
+    out_ref[0, 0] = jnp.where(sid < n_nodes, dist, jnp.float32(jnp.inf))
+
+
+def l2dist_rowgather(
+    table: jax.Array, ids: jax.Array, queries: jax.Array,
+    *, interpret: bool = True,
+) -> jax.Array:
+    """(N,d) table, (B,C) ids, (B,d) queries -> (B,C) f32 sq-distances."""
+    n, d = table.shape
+    bsz, c = ids.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, c),
+        in_specs=[
+            # one gathered table row per grid step, addressed by the
+            # prefetched candidate id (clamped; padding masked in-kernel)
+            pl.BlockSpec(
+                (1, d), lambda b, cc, ids_ref: (jnp.minimum(
+                    ids_ref[b, cc], n - 1), 0)),
+            pl.BlockSpec((1, d), lambda b, cc, ids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, cc, ids_ref: (b, cc)),
+    )
+    kernel = functools.partial(_rowgather_kernel, n_nodes=n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        interpret=interpret,
+    )(ids, table, queries)
+
+
+# ---------------------------------------------------------------------------
+# Variant 2: explicit-DMA tile gather + MXU reduction
+# ---------------------------------------------------------------------------
+
+def _dma_kernel(ids_ref, table_ref, q_ref, out_ref, rows, sem,
+                *, n_nodes: int, g: int):
+    b = pl.program_id(0)
+    cb = pl.program_id(1)
+    # issue G row DMAs HBM->VMEM (Mosaic overlaps them; interpret mode runs
+    # them synchronously)
+    for i in range(g):
+        sid = jnp.minimum(ids_ref[b, cb * g + i], n_nodes - 1)
+        pltpu.make_async_copy(
+            table_ref.at[pl.ds(sid, 1), :], rows.at[pl.ds(i, 1), :], sem
+        ).start()
+    for i in range(g):
+        pltpu.make_async_copy(
+            table_ref.at[pl.ds(0, 1), :], rows.at[pl.ds(i, 1), :], sem
+        ).wait()
+    x = rows[...].astype(jnp.float32)                      # (G, d)
+    q = q_ref[0, :].astype(jnp.float32)                    # (d,)
+    x2 = jnp.sum(x * x, axis=1)
+    q2 = jnp.sum(q * q)
+    xq = jax.lax.dot_general(                              # MXU (G,d)x(d,1)
+        x, q[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[:, 0]
+    dist = x2 - 2.0 * xq + q2
+    valid = jnp.stack([ids_ref[b, cb * g + i] < n_nodes for i in range(g)])
+    out_ref[0, :] = jnp.where(valid, jnp.maximum(dist, 0.0),
+                              jnp.float32(jnp.inf))
+
+
+def l2dist_dma(
+    table: jax.Array, ids: jax.Array, queries: jax.Array,
+    *, g: int = 8, interpret: bool = True,
+) -> jax.Array:
+    """DMA-tile variant; requires C % g == 0 (pad ids with N to align)."""
+    n, d = table.shape
+    bsz, c = ids.shape
+    assert c % g == 0, f"candidate count {c} not divisible by tile {g}"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, c // g),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ARBITRARY),   # table stays in HBM
+            pl.BlockSpec((1, d), lambda b, cb, ids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g), lambda b, cb, ids_ref: (b, cb)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), table.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+    )
+    kernel = functools.partial(_dma_kernel, n_nodes=n, g=g)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        interpret=interpret,
+    )(ids, table, queries)

@@ -1,0 +1,119 @@
+"""jit'd public wrappers around the Pallas kernels + search integration.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware set ``repro.kernels.ops.INTERPRET = False`` (or pass
+``interpret=False``) and the same code lowers through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bitonic as _bitonic
+from repro.kernels import l2dist as _l2
+from repro.kernels import ref as _ref
+
+INTERPRET = True   # flip on real TPU
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def l2dist(
+    table: jax.Array, ids: jax.Array, queries: jax.Array,
+    impl: str = "rowgather", interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather + squared-L2: (N,d), (B,C), (B,d) -> (B,C) f32."""
+    itp = INTERPRET if interpret is None else interpret
+    if impl == "ref":
+        return _ref.l2dist_ref(table, ids, queries)
+    if impl == "rowgather":
+        return _l2.l2dist_rowgather(table, ids, queries, interpret=itp)
+    if impl == "dma":
+        return _l2.l2dist_dma(table, ids, queries, interpret=itp)
+    raise ValueError(impl)
+
+
+def make_dist_fn(impl: str = "rowgather", interpret: bool | None = None):
+    """Adapter producing a ``core.bfis.DistFn`` that routes the expansion's
+    distance computations through the Pallas kernel.
+
+    Note: the kernel reads the flat embedding table; the two-level flattened
+    layout is exploited by the pipeline's row streaming itself (hot rows stay
+    in VMEM across adjacent grid steps), so no separate path is needed.
+    """
+    def dist_fn(graph, active_ids, nbr_ids, q):
+        m, r = nbr_ids.shape
+        d = l2dist(graph.vectors, nbr_ids.reshape(1, m * r), q[None, :],
+                   impl=impl, interpret=interpret)
+        return d.reshape(m, r)
+    return dist_fn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sort_pairs(keys, p0, p1, interpret: bool | None = None):
+    """Row-wise (B, n) ascending co-sort by (key, p0); n must be 2**k."""
+    itp = INTERPRET if interpret is None else interpret
+    return _bitonic.sort_pairs(keys, p0, p1, interpret=itp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def topl_merge(
+    q_dists: jax.Array, q_ids: jax.Array, q_meta: jax.Array,
+    c_dists: jax.Array, c_ids: jax.Array,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Frontier merge on the bitonic kernel (B-batched, mirrors queue.insert).
+
+    Queue (B, L) sorted rows + candidates (B, C) -> top-L (dists, ids, meta)
+    and per-row update positions.  L + C is padded to the next power of two.
+    """
+    invalid = jnp.int32(2**31 - 1)
+    big = jnp.float32(jnp.inf)
+    bsz, l = q_ids.shape
+    c = c_ids.shape[1]
+    n = 1
+    while n < l + c:
+        n *= 2
+    pad = n - (l + c)
+
+    ids = jnp.concatenate(
+        [q_ids, c_ids, jnp.full((bsz, pad), invalid, jnp.int32)], axis=1)
+    dists = jnp.concatenate(
+        [q_dists, c_dists, jnp.full((bsz, pad), big, jnp.float32)], axis=1)
+    is_new = jnp.concatenate(
+        [jnp.zeros((bsz, l), jnp.int32), jnp.ones((bsz, c), jnp.int32),
+         jnp.zeros((bsz, pad), jnp.int32)], axis=1)
+    meta = jnp.concatenate(
+        [q_meta.astype(jnp.int32), jnp.zeros((bsz, c + pad), jnp.int32)],
+        axis=1)
+    # pack (meta, is_new) into one payload so the 3-array kernel suffices
+    packed = meta * 2 + is_new
+
+    # pass 1: group by (id, is_new) so existing entries precede fresh dups.
+    # Split the id into (high 23 bits as an exact f32 key, low 8 bits in the
+    # int payload) — exact ordering for ids up to 2^31 without denormal
+    # bitcasts; is_new rides in the payload's LSB.
+    key_hi = (ids >> 8).astype(jnp.float32)
+    p0 = ((ids & 0xFF) << 1) | (packed & 1)
+    positions = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.int32)[None, :], (bsz, n))
+    _, _, pos = sort_pairs(key_hi, p0, positions, interpret=interpret)
+    # gather full rows by the returned original positions
+    take = jax.vmap(lambda a, p: a[p])
+    ids_g = take(ids, pos)
+    dists_g = take(dists, pos)
+    packed_g = take(packed, pos)
+    dup = jnp.concatenate(
+        [jnp.zeros((bsz, 1), bool),
+         (ids_g[:, 1:] == ids_g[:, :-1]) & (ids_g[:, 1:] != invalid)], axis=1)
+    ids_g = jnp.where(dup, invalid, ids_g)
+    dists_g = jnp.where(dup, big, dists_g)
+
+    # pass 2: by (dist, id)
+    d2, i2, pk2 = sort_pairs(dists_g, ids_g, packed_g, interpret=interpret)
+    rank = jnp.arange(n, dtype=jnp.int32)[None, :]
+    surv = (pk2 & 1 == 1) & (i2 != invalid) & (rank < l)
+    up = jnp.min(jnp.where(surv, rank, l), axis=1).astype(jnp.int32)
+    return d2[:, :l], i2[:, :l], (pk2[:, :l] >> 1), up

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must agree (assert_allclose) with the functions
+here across shape/dtype sweeps — see tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2dist_ref(table: jax.Array, ids: jax.Array, queries: jax.Array
+               ) -> jax.Array:
+    """Gather + squared-L2 distance oracle.
+
+    table:   (N, d) feature vectors
+    ids:     (B, C) int32 candidate ids; ids >= N are padding -> +inf
+    queries: (B, d)
+    returns: (B, C) float32 squared distances
+    """
+    n = table.shape[0]
+    safe = jnp.minimum(ids, n - 1)
+    rows = table[safe].astype(jnp.float32)                # (B, C, d)
+    q = queries.astype(jnp.float32)[:, None, :]           # (B, 1, d)
+    d2 = jnp.sum((rows - q) ** 2, axis=-1)
+    return jnp.where(ids < n, d2, jnp.inf).astype(jnp.float32)
+
+
+def sort_pairs_ref(keys: jax.Array, *payloads: jax.Array):
+    """Ascending co-sort oracle: sort by (key, payload0) for determinism.
+
+    keys: (B, n) float32; payloads: (B, n) int32 arrays.
+    """
+    if payloads:
+        out = jax.lax.sort((keys, *payloads), num_keys=2, is_stable=True,
+                           dimension=-1)
+    else:
+        out = jax.lax.sort((keys,), num_keys=1, is_stable=True, dimension=-1)
+    return out
+
+
+def topl_merge_ref(
+    q_dists: jax.Array, q_ids: jax.Array, q_meta: jax.Array,
+    c_dists: jax.Array, c_ids: jax.Array,
+    invalid_id: int,
+) -> tuple:
+    """Frontier-merge oracle (mirrors core.queue.insert semantics).
+
+    Queue rows (B, L) merge with candidate rows (B, C); duplicate ids keep
+    the queue entry (meta carries the checked bit); output is the ascending
+    (dist, id) top-L with the update position per row.
+    """
+    big = jnp.float32(jnp.inf)
+    l = q_ids.shape[-1]
+    ids = jnp.concatenate([q_ids, c_ids], axis=-1)
+    dists = jnp.concatenate([q_dists, c_dists], axis=-1)
+    meta = jnp.concatenate(
+        [q_meta, jnp.zeros_like(c_ids)], axis=-1)
+    is_new = jnp.concatenate(
+        [jnp.zeros_like(q_ids), jnp.ones_like(c_ids)], axis=-1)
+    # pass 1: by (id, is_new); drop dups
+    ids, is_new, dists, meta = jax.lax.sort(
+        (ids, is_new, dists, meta), num_keys=2, is_stable=True, dimension=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids[..., :1], bool),
+         (ids[..., 1:] == ids[..., :-1]) & (ids[..., 1:] != invalid_id)],
+        axis=-1)
+    ids = jnp.where(dup, invalid_id, ids)
+    dists = jnp.where(dup, big, dists)
+    # pass 2: by (dist, id)
+    dists, ids, meta, is_new = jax.lax.sort(
+        (dists, ids, meta, is_new), num_keys=2, is_stable=True, dimension=-1)
+    rank = jnp.arange(ids.shape[-1], dtype=jnp.int32)
+    surv = (is_new == 1) & (ids != invalid_id) & (rank < l)
+    up = jnp.min(jnp.where(surv, rank, l), axis=-1).astype(jnp.int32)
+    return dists[..., :l], ids[..., :l], meta[..., :l], up

@@ -1,0 +1,393 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds ``ShapeDtypeStruct`` stand-ins for every input (``input_specs``)
+     — weak-type-correct, shardable, NO device allocation;
+  2. ``jax.jit(step, in_shardings=…, out_shardings=…).lower(...).compile()``
+     on the production mesh (16×16 single-pod and 2×16×16 multi-pod);
+  3. records ``memory_analysis()`` (proves it fits), ``cost_analysis()``
+     (FLOPs/bytes for §Roofline), and the collective bytes parsed from the
+     optimized HLO, into ``dryrun_results.json`` (incremental — resumable).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k \
+        --mesh single,multi
+"""
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import functools         # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config import (FAMILY_ENCDEC, FAMILY_VLM, ModelConfig,  # noqa: E402
+                          ShapeConfig, SHAPES_BY_NAME, TrainConfig)
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.configs.shapes import cell_matrix  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.sharding import (ACT_RULES, DEFAULT_RULES, param_specs,  # noqa: E402
+                            resolve_spec, use_rules)
+from repro.train.train_step import init_train_state, make_train_step  # noqa: E402
+
+RESULTS_PATH = os.environ.get("DRYRUN_RESULTS",
+                              os.path.join(os.path.dirname(__file__),
+                                           "../../../dryrun_results.json"))
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_config_for(cfg: ModelConfig) -> TrainConfig:
+    """>=100B params: bf16 moments so optimizer state fits a 256-chip pod.
+
+    microbatches=8: 1M tokens/step at seq 4096 does not fit activations in
+    16GB/chip without microbatching (baseline job config, not a perf trick).
+    """
+    big = cfg.param_count() >= 1e11
+    return TrainConfig(
+        moment_dtype="bfloat16" if big else "float32",
+        remat="full", microbatches=8)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds((b, s), I32),
+            "targets": sds((b, s), I32),
+            "mask": sds((b, s), F32),
+        }
+        if cfg.family == FAMILY_ENCDEC:
+            # stub frontend: precomputed frame embeddings
+            batch["frames"] = sds((b, cfg.encoder_ctx, cfg.d_model), BF16)
+        if cfg.family == FAMILY_VLM:
+            batch["positions"] = sds((3, b, s), I32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), I32)}
+        if cfg.family == FAMILY_ENCDEC:
+            batch["frames"] = sds((b, cfg.encoder_ctx, cfg.d_model), BF16)
+        if cfg.family == FAMILY_VLM:
+            batch["positions"] = sds((3, b, s), I32)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {"token": sds((b, 1), I32)}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    logical = {
+        "tokens": ("batch", "seq"), "targets": ("batch", "seq"),
+        "mask": ("batch", "seq"),
+        "frames": ("batch", "frames", "embed"),
+        "positions": (None, "batch", "seq"),
+        "token": ("batch", None),
+    }
+    batch = input_specs(cfg, shape)
+    return {
+        k: NamedSharding(mesh, resolve_spec(v.shape, logical[k], mesh,
+                                            ACT_RULES))
+        for k, v in batch.items()
+    }
+
+
+def _shardings_for(tree_sds, mesh):
+    specs = param_specs(tree_sds, mesh)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+
+
+def _reduced_depths(cfg: ModelConfig):
+    """Two reduced depths for per-layer cost extrapolation (unrolled).
+
+    XLA's cost_analysis counts a while-loop body once, so FLOPs/bytes/
+    collective bytes of scan-over-layers lowerings understate full depth.
+    We lower two small UNROLLED variants and extrapolate linearly:
+        total(D) = f(d2) + (D - d2) * (f(d4) - f(d2)) / (d4 - d2).
+    Hybrid (zamba2) uses whole groups (7 = 6 mamba + 1 attn) as the unit;
+    the 4 trailing mamba layers are counted at the blended per-layer rate
+    (~2% overestimate of their attention share — documented).
+    """
+    if cfg.family == "hybrid":
+        per = cfg.hybrid_attn_every + 1
+        return per, 2 * per
+    return 2, 4
+
+
+def _with_depth(cfg: ModelConfig, depth: int) -> ModelConfig:
+    kw = {"num_layers": depth, "scan_layers": False}
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = depth
+    return dataclasses.replace(cfg, **kw)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules=None, extra_tcfg: Optional[dict] = None,
+               cfg_override: Optional[ModelConfig] = None):
+    """Lower + compile one cell; returns (lowered, compiled, meta)."""
+    cfg = cfg_override or get_config(arch)
+    pd = os.environ.get("DRYRUN_PARAM_DTYPE")
+    if pd:   # §Perf knob: parameter storage dtype (FSDP gather bytes)
+        cfg = dataclasses.replace(cfg, param_dtype=pd)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    tcfg = train_config_for(cfg)
+    if extra_tcfg:
+        tcfg = dataclasses.replace(tcfg, **extra_tcfg)
+    key = jax.random.PRNGKey(0)
+
+    with use_rules(rules or DEFAULT_RULES, mesh):
+        batch = input_specs(cfg, shape)
+        bspecs = batch_specs(cfg, shape, mesh)
+
+        if shape.kind == "train":
+            state_sds = jax.eval_shape(
+                lambda k: init_train_state(model, k, tcfg), key)
+            state_sh = _shardings_for(state_sds, mesh)
+            step = make_train_step(model, tcfg)
+            jf = jax.jit(step, in_shardings=(state_sh, bspecs),
+                         out_shardings=(state_sh, None))
+            lowered = jf.lower(state_sds, batch)
+
+        elif shape.kind == "prefill":
+            params_sds = jax.eval_shape(model.init, key)
+            params_sh = _shardings_for(params_sds, mesh)
+
+            if cfg.family == FAMILY_ENCDEC:
+                def step(params, b):
+                    return model.prefill(params, b["frames"], b["tokens"],
+                                         s_max=shape.seq_len)
+            elif cfg.family == FAMILY_VLM:
+                def step(params, b):
+                    return model.prefill(params, b["tokens"],
+                                         s_max=shape.seq_len,
+                                         positions=b["positions"])
+            else:
+                def step(params, b):
+                    return model.prefill(params, b["tokens"],
+                                         s_max=shape.seq_len)
+
+            jf = jax.jit(step, in_shardings=(params_sh, bspecs))
+            lowered = jf.lower(params_sds, batch)
+
+        else:  # decode
+            params_sds = jax.eval_shape(model.init, key)
+            params_sh = _shardings_for(params_sds, mesh)
+            dstate_sds = jax.eval_shape(
+                functools.partial(model.init_decode_state,
+                                  shape.global_batch, shape.seq_len))
+            dstate_sh = _shardings_for(dstate_sds, mesh)
+
+            def step(params, dstate, b):
+                return model.decode_step(params, dstate, b["token"])
+
+            jf = jax.jit(step,
+                         in_shardings=(params_sh, dstate_sh, bspecs),
+                         out_shardings=(None, dstate_sh))
+            lowered = jf.lower(params_sds, dstate_sds, batch)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": 512 if multi_pod else 256,
+            "compile_s": round(compile_s, 1)}
+    return lowered, compiled, meta, cfg, shape
+
+
+def _costs_of(compiled) -> Dict:
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": rl.collective_bytes(hlo),
+    }
+
+
+def _extrapolate(arch, shape_name, multi_pod, cfg, full_depth,
+                 shape_kind: str) -> Dict:
+    """Full-depth FLOPs/bytes/collectives from two reduced unrolled
+    lowerings (see _reduced_depths).
+
+    Train cost lowerings use microbatches=1: total per-step FLOPs/bytes are
+    identical to the microbatched schedule (same tokens), and the once-per-
+    step gradient all-reduce is counted exactly once.  (The microbatched
+    schedule re-gathers FSDP weight shards per microbatch, which this
+    undercounts — noted in EXPERIMENTS.md; the full-depth compile that
+    proves memory fit still uses the real microbatched config.)
+    """
+    d2, d4 = _reduced_depths(cfg)
+    tc = {"microbatches": 1} if shape_kind == "train" else None
+    c2 = _costs_of(lower_cell(arch, shape_name, multi_pod, extra_tcfg=tc,
+                              cfg_override=_with_depth(cfg, d2))[1])
+    c4 = _costs_of(lower_cell(arch, shape_name, multi_pod, extra_tcfg=tc,
+                              cfg_override=_with_depth(cfg, d4))[1])
+    mult = 1
+
+    def lin(f2, f4):
+        per = (f4 - f2) / (d4 - d2)
+        return (f2 + (full_depth - d2) * per) * mult, per * mult
+
+    flops, flops_per = lin(c2["flops"], c4["flops"])
+    nbytes, _ = lin(c2["bytes"], c4["bytes"])
+    coll = {}
+    for k in c2["coll"]:
+        coll[k] = int(max(lin(c2["coll"][k], c4["coll"][k])[0], 0))
+    return {"flops": flops, "bytes": nbytes, "coll": coll,
+            "flops_per_layer": flops_per, "depths_used": [d2, d4],
+            "microbatch_mult": mult}
+
+
+def analyze(lowered, compiled, meta, cfg, shape,
+            extrapolated: Optional[Dict] = None) -> Dict:
+    chips = meta["chips"]
+    scan_costs = _costs_of(compiled)
+    if extrapolated is not None:
+        flops = extrapolated["flops"]
+        bytes_accessed = extrapolated["bytes"]
+        coll = extrapolated["coll"]
+    else:
+        flops = scan_costs["flops"]
+        bytes_accessed = scan_costs["bytes"]
+        coll = scan_costs["coll"]
+    # cost_analysis is PER-DEVICE (the compiled module is the SPMD
+    # partition): scale to module-global so the §Roofline formulas
+    # (x / (chips × rate)) apply as written.
+    flops *= chips
+    bytes_accessed *= chips
+    coll = {k: v * chips for k, v in coll.items()}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_info = {}
+    terms = rl.roofline_terms(flops, bytes_accessed, coll, chips)
+    mf = rl.model_flops(cfg, shape)
+    out = dict(meta)
+    out.update({
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collectives": coll,
+        "scan_hlo_flops": scan_costs["flops"],   # body-counted-once raw
+        "memory": mem_info,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / flops) if flops else None,
+        "extrapolation": (extrapolated or {}).get("depths_used"),
+        **terms,
+    })
+    return out
+
+
+def load_results() -> Dict:
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(res: Dict):
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, res: Dict,
+             force: bool = False, tag: str = "") -> bool:
+    key = f"{arch}|{shape_name}|{mesh_kind}" + (f"#{tag}" if tag else "")
+    if key in res and not force and res[key].get("status") == "ok":
+        print(f"[skip cached] {key}")
+        return True
+    t0 = time.time()
+    try:
+        multi = mesh_kind == "multi"
+        lowered, compiled, meta, cfg, shape = lower_cell(
+            arch, shape_name, multi)
+        # depth-extrapolated roofline costs: single-pod only (the §Roofline
+        # table is single-pod; multi-pod proves compile + the pod axis)
+        extra = None
+        if not multi:
+            extra = _extrapolate(arch, shape_name, multi, cfg,
+                                 cfg.num_layers, shape.kind)
+        out = analyze(lowered, compiled, meta, cfg, shape, extra)
+        out["status"] = "ok"
+        res[key] = out
+        print(f"[ok] {key}  compile={out['compile_s']}s "
+              f"flops={out['hlo_flops']:.3e} dominant={out['dominant']}"
+              f"  ({time.time() - t0:.0f}s total)")
+        ok = True
+    except Exception as e:  # noqa: BLE001 — record the failure
+        res[key] = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]}
+        print(f"[FAIL] {key}: {type(e).__name__}: {e}")
+        ok = False
+    save_results(res)
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--moe-impl", default="gspmd", choices=("gspmd", "a2a"))
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    if args.moe_impl != "gspmd":
+        from repro.models import moe_a2a
+        moe_a2a.set_moe_impl(args.moe_impl)
+
+    res = load_results()
+    meshes = args.mesh.split(",")
+    cells = cell_matrix()
+    n_ok = n_fail = 0
+    for cell in cells:
+        if args.arch and cell.arch != args.arch:
+            continue
+        if args.shape and cell.shape.name != args.shape:
+            continue
+        if cell.skip is not None:
+            key_base = f"{cell.arch}|{cell.shape.name}"
+            for mk in meshes:
+                res[f"{key_base}|{mk}"] = {"status": "skip",
+                                           "reason": cell.skip}
+            save_results(res)
+            print(f"[documented skip] {key_base}: {cell.skip.split(';')[0]}")
+            continue
+        for mk in meshes:
+            if run_cell(cell.arch, cell.shape.name, mk, res,
+                        force=args.force, tag=args.tag):
+                n_ok += 1
+            else:
+                n_fail += 1
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed "
+          f"(results -> {os.path.abspath(RESULTS_PATH)})")
+
+
+if __name__ == "__main__":
+    main()

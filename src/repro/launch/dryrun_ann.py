@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Dry-run of the PAPER'S OWN system at production scale: the Speed-ANN
+search service lowered + compiled on the 16×16 and 2×16×16 meshes with
+ShapeDtypeStruct graphs (no allocation).
+
+Two configurations, mirroring §5.5 (billion-scale practicality):
+
+* corpus-sharded: DEEP-like d=96 corpus, 48M nodes × R=24 per model-axis
+  shard → 768M nodes single-pod / 1.5B nodes multi-pod; per-device graph
+  bytes = 48M×(96×2B + 24×4B) ≈ 13.8 GB — fits 16 GB HBM, proving the
+  billion-point regime of Figure 20 is servable from a pod of v5e.
+* walker-sharded (the paper's intra-query parallelism): DEEP10M-scale
+  graph replicated per device; 16 walkers along the model axis; hash
+  visited sets (memory independent of N); queries sharded over data.
+
+Outputs to ``ann_dryrun_results.json``:
+    PYTHONPATH=src python -m repro.launch.dryrun_ann
+"""
+import functools     # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.config import SearchConfig  # noqa: E402
+from repro.core.distributed import (ShardedIndex, corpus_sharded_search,  # noqa: E402
+                                    walker_sharded_search)
+from repro.core.graph import PaddedCSR  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__),
+                       "../../../ann_dryrun_results.json")
+
+D = 96          # DEEP dimensionality
+R = 24          # graph out-degree
+N_SHARD = 48_000_000
+N_WALKER_GRAPH = 10_000_000
+QUERIES = 1024
+CFG = SearchConfig(k=10, queue_len=128, m_max=16, num_walkers=16,
+                   max_steps=64, local_steps=8, sync_ratio=0.8,
+                   visited_mode="hash", hash_bits=16, global_rounds=12)
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def corpus_cell(multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shards = 16
+    index = ShardedIndex(
+        nbrs=sds((shards, N_SHARD, R), jnp.int32),
+        vectors=sds((shards, N_SHARD, D), jnp.bfloat16),
+        medoids=sds((shards,), jnp.int32),
+        offsets=sds((shards,), jnp.int32),
+    )
+    queries = sds((QUERIES, D), jnp.float32)
+    cfg = CFG.with_(m_max=1, num_walkers=1, staged=False)
+
+    def step(nbrs, vectors, medoids, offsets, q):
+        idx = ShardedIndex(nbrs, vectors, medoids, offsets)
+        return corpus_sharded_search(idx, q, cfg, mesh)
+
+    shard_spec = NamedSharding(mesh, P("model"))
+    qspec = NamedSharding(mesh, P("data"))
+    jf = jax.jit(step, in_shardings=(shard_spec, shard_spec, shard_spec,
+                                     shard_spec, qspec))
+    return jf.lower(index.nbrs, index.vectors, index.medoids, index.offsets,
+                    queries), mesh
+
+
+def walker_cell(multi_pod: bool):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rep = NamedSharding(mesh, P())
+    graph = PaddedCSR(
+        nbrs=sds((N_WALKER_GRAPH, R), jnp.int32),
+        vectors=sds((N_WALKER_GRAPH, D), jnp.bfloat16),
+        medoid=sds((), jnp.int32),
+        n_top=0,
+        flat=sds((0, R, D), jnp.bfloat16),
+    )
+    queries = sds((QUERIES, D), jnp.float32)
+
+    def step(nbrs, vectors, medoid, flat, q):
+        g = PaddedCSR(nbrs=nbrs, vectors=vectors, medoid=medoid, n_top=0,
+                      flat=flat)
+        return walker_sharded_search(g, q, CFG, mesh)
+
+    jf = jax.jit(step, in_shardings=(rep, rep, rep, rep,
+                                     NamedSharding(mesh, P("data"))))
+    return jf.lower(graph.nbrs, graph.vectors, graph.medoid, graph.flat,
+                    queries), mesh
+
+
+def run(name, fn, multi_pod):
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    lowered, mesh = fn(multi_pod)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = rl.collective_bytes(compiled.as_text())
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {"argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                              None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None)}
+    except Exception:
+        mem_info = {}
+    terms = rl.roofline_terms(float(cost.get("flops", 0)) * chips,
+                              float(cost.get("bytes accessed", 0)) * chips,
+                              {k: v * chips for k, v in coll.items()}, chips)
+    out = {"status": "ok", "chips": chips,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "compile_s": round(time.time() - t0, 1),
+           "hlo_flops": float(cost.get("flops", 0)) * chips,
+           "hlo_bytes": float(cost.get("bytes accessed", 0)) * chips,
+           "collectives": coll, "memory": mem_info, **terms}
+    print(f"[ok] {name}  compile={out['compile_s']}s "
+          f"dominant={out['dominant']} arg_bytes/dev="
+          f"{(mem_info.get('argument_bytes') or 0) / 1e9:.1f}GB")
+    return out
+
+
+def main():
+    res = {}
+    if os.path.exists(RESULTS):
+        with open(RESULTS) as f:
+            res = json.load(f)
+    jobs = [
+        ("speedann-corpus-768M|serve|single", corpus_cell, False),
+        ("speedann-corpus-1.5B|serve|multi", corpus_cell, True),
+        ("speedann-walker-10M|serve|single", walker_cell, False),
+        ("speedann-walker-10M|serve|multi", walker_cell, True),
+    ]
+    for name, fn, multi in jobs:
+        if res.get(name, {}).get("status") == "ok":
+            print(f"[cached] {name}")
+            continue
+        try:
+            res[name] = run(name, fn, multi)
+        except Exception as e:  # noqa: BLE001
+            res[name] = {"status": "fail",
+                         "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+        with open(RESULTS, "w") as f:
+            json.dump(res, f, indent=1, sort_keys=True)
+    print("ann dry-run complete ->", os.path.abspath(RESULTS))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""HLO-level profiling for the perf loop (no real hardware).
+
+Parses the optimized per-device HLO of a compiled cell and ranks ops by
+modeled cost: dots by FLOPs (2·Πdims·contraction), everything else by
+result bytes.  This is the dry-run substitute for a profiler trace — it
+answers "which op dominates the roofline term" so hypotheses target the
+right op (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_SHAPE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s16": 2,
+          "u16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+          "u64": 8}
+
+
+def _dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def dot_flops(line: str) -> int:
+    """FLOPs of a dot from 'result = TYPE dot(a, b), ... contracting_dims'."""
+    m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) dot\((.+?)\)", line)
+    if not m:
+        return 0
+    res = _dims(m.group(1))
+    if not res:
+        return 0
+    res_n = _numel(res[0][1])
+    # contraction size: parse lhs shape and contracting dims
+    ops = m.group(2)
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    shapes = _dims(ops)
+    if not mdims or not shapes:
+        return 2 * res_n  # fallback
+    lhs = shapes[0][1]
+    contract = 1
+    for d in mdims.group(1).split(","):
+        if d:
+            contract *= lhs[int(d)]
+    return 2 * res_n * contract
+
+
+def profile(hlo_text: str, top: int = 15) -> Dict:
+    """Rank dots by FLOPs and all ops by result bytes."""
+    dots: List[Tuple[int, str]] = []
+    bytes_by_op: Dict[str, int] = defaultdict(int)
+    flops_total = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)[\(.]", line)
+        if not m:
+            continue
+        op = m.group(2)
+        res = _dims(m.group(1))
+        rb = sum(_numel(d) * _BYTES.get(dt, 4) for dt, d in res)
+        bytes_by_op[op] += rb
+        if op == "dot":
+            f = dot_flops(line)
+            flops_total += f
+            dots.append((f, line[:160]))
+    dots.sort(reverse=True)
+    return {
+        "dot_flops_total": flops_total,
+        "top_dots": dots[:top],
+        "bytes_by_op": dict(sorted(bytes_by_op.items(),
+                                   key=lambda kv: -kv[1])[:top]),
+    }
+
+
+def print_profile(hlo_text: str, top: int = 12):
+    p = profile(hlo_text, top)
+    print(f"total dot flops (per device, loop bodies once): "
+          f"{p['dot_flops_total']:.3e}")
+    print("-- top dots --")
+    for f, line in p["top_dots"]:
+        print(f"  {f:.3e}  {line}")
+    print("-- result bytes by op --")
+    for op, b in p["bytes_by_op"].items():
+        print(f"  {b / 1e9:8.2f} GB  {op}")
+    return p

@@ -1,0 +1,105 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips × 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips × 819e9 B/s HBM)
+    collective = collective_bytes / (chips × 50e9 B/s/link ICI)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO and sum the
+result-shape bytes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (documented convention: result bytes ≈
+wire bytes for AG/RS/CP; all-reduce counted 2× for the ring RS+AG).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (~per-chip effective)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.  f32[16,1024]{1,0}  or  bf16[8,128,2048]
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in a type string
+    (handles tuples like (f32[8,2], f32[8,2]))."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type result bytes summed over the module."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+?) ([a-z\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue                       # async pair: count -start only
+        base = op[:-len("-start")] if op.endswith("-start") else op
+        if base not in _COLLECTIVES:
+            continue
+        out[base] += _shape_bytes(m.group(1))
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll: Dict[str, int], chips: int) -> Dict[str, float]:
+    wire = (2 * coll.get("all-reduce", 0)
+            + coll.get("all-gather", 0)
+            + coll.get("reduce-scatter", 0)
+            + coll.get("all-to-all", 0)
+            + coll.get("collective-permute", 0))
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = bytes_accessed / (chips * HBM_BW)
+    t_coll = wire / (chips * ICI_BW)
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "collective_wire_bytes": wire,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); decode D=new
+    tokens only."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one new token per sequence
+    return 2.0 * n * shape.global_batch

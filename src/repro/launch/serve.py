@@ -1,0 +1,70 @@
+"""Serving launcher: ANN search service or LM decode service.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode ann [--n 8000]
+    PYTHONPATH=src python -m repro.launch.serve --mode lm --arch yi-9b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def serve_ann(args):
+    from repro.config import SearchConfig
+    from repro.core import build_nsg, recall_at_k, search_speedann_batch
+    from repro.data import make_vector_dataset
+
+    ds = make_vector_dataset("sift", n=args.n, n_queries=args.batch, k=10,
+                             dim=32)
+    graph = build_nsg(ds.base, degree=32, knn_k=32, ef_construction=96)
+    cfg = SearchConfig(k=10, queue_len=96, m_max=8, num_walkers=8,
+                       max_steps=384, local_steps=8)
+    search = jax.jit(lambda q: search_speedann_batch(graph, q, cfg))
+    jax.block_until_ready(search(jnp.asarray(ds.queries))[0])
+    t0 = time.perf_counter()
+    ids, _, _ = search(jnp.asarray(ds.queries))
+    jax.block_until_ready(ids)
+    dt = time.perf_counter() - t0
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    print(f"ann-serve: {args.batch} queries in {dt * 1e3:.1f}ms "
+          f"({dt / args.batch * 1e3:.2f}ms/q) recall@10={r:.3f}")
+
+
+def serve_lm(args):
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import build_model
+    from repro.serve import ServeEngine
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, s_max=64)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, 8), 0,
+                                cfg.vocab_size)
+    toks, _ = eng.generate(prompt, steps=16, temperature=0.8)
+    jax.block_until_ready(toks)
+    t0 = time.perf_counter()
+    toks, _ = eng.generate(prompt, steps=16, temperature=0.8)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    print(f"lm-serve: arch={cfg.name} {args.batch}x16 tokens in "
+          f"{dt * 1e3:.1f}ms; sample row: {np.asarray(toks)[0][:8]}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("ann", "lm"), default="ann")
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+    (serve_ann if args.mode == "ann" else serve_lm)(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        [--smoke] [--steps 100] [--data N] [--model M] [--compress]
+
+On this CPU container use ``--smoke`` (reduced config, 1 device).  On a real
+cluster the same entry point runs the full config on the production mesh
+(jax.distributed.initialize is called when JAX_COORDINATOR is set).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from repro.config import TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.data.tokens import TokenStream
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.sharding import DEFAULT_RULES, use_rules
+from repro.train import Trainer
+from repro.train.train_step import make_compressed_dp_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 gradient all-reduce (explicit-DP step)")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        total_steps=args.steps, warmup_steps=max(args.steps // 10, 1),
+        learning_rate=3e-3, checkpoint_every=max(args.steps // 5, 1),
+        checkpoint_dir=args.ckpt_dir or f"/tmp/repro_train_{args.arch}",
+        grad_compression="int8" if args.compress else "none")
+    stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         batch=args.batch, seed=0, shard=0, num_shards=1)
+
+    mesh = make_host_mesh(args.data, args.model)
+    with use_rules(DEFAULT_RULES, mesh):
+        step = None
+        if args.compress:
+            step = make_compressed_dp_train_step(model, tcfg, mesh)
+        trainer = Trainer(model, tcfg, stream, train_step=step)
+        trainer.run(steps=args.steps)
+    losses = [m["loss"] for m in trainer.metrics_log]
+    print(f"done: arch={cfg.name} loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,188 @@
+"""Grouped-query attention with KV cache, RoPE/M-RoPE, sliding window.
+
+Three entry points share one core:
+  * ``attend(..., mode="train")``   — full causal self-attention
+  * ``attend(..., mode="prefill")`` — causal, writes the cache
+  * ``attend(..., mode="decode")``  — one query step against the cache
+
+The KV cache layout is (B, S_max, kv_heads, head_dim) with the *sequence*
+dimension annotated ``kv_seq`` → context parallelism on the model axis for
+long-context decode; GSPMD inserts the softmax partial reductions.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import apply_rope, normal_init
+from repro.sharding import shard
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S_max, kv_heads, head_dim)
+    v: jax.Array      # (B, S_max, kv_heads, head_dim)
+
+
+def attn_init(key, cfg: ModelConfig, d_in: Optional[int] = None,
+              dtype=None) -> dict:
+    d = d_in or cfg.d_model
+    h = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / (d ** 0.5)
+    p = {
+        "wq": normal_init(ks[0], (d, nq * h), scale, dtype),
+        "wk": normal_init(ks[1], (d, nkv * h), scale, dtype),
+        "wv": normal_init(ks[2], (d, nkv * h), scale, dtype),
+        "wo": normal_init(ks[3], (nq * h, cfg.d_model),
+                          1.0 / ((nq * h) ** 0.5), dtype),
+    }
+    if cfg.qkv_bias:
+        p["wq_b"] = jnp.zeros((nq * h,), dtype)
+        p["wk_b"] = jnp.zeros((nkv * h,), dtype)
+        p["wv_b"] = jnp.zeros((nkv * h,), dtype)
+    return p
+
+
+def _proj_qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(dt))
+    if "wq_b" in p:
+        q = q + p["wq_b"].astype(dt)
+        k = k + p["wk_b"].astype(dt)
+        v = v + p["wv_b"].astype(dt)
+    q = shard(q.reshape(b, s, nq, h), "batch", "seq", "heads", None)
+    k = shard(k.reshape(b, s, nkv, h), "batch", "seq", "kv_heads", None)
+    v = shard(v.reshape(b, s, nkv, h), "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """Scaled dot-product attention with GQA head-group expansion.
+
+    q (B,Sq,Hq,D); k/v (B,Sk,Hkv,D); mask broadcastable (B,1,Sq,Sk) bool.
+
+    K/V are consumed in their storage dtype (bf16) with f32 MXU accumulation
+    (``preferred_element_type``) — converting the KV cache to f32 would 3×
+    its HBM traffic, which dominated the decode-cell memory roofline
+    (§Perf iteration C1).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    groups = hq // hkv
+    qs = (q.astype(jnp.float32) / (d ** 0.5)).astype(q.dtype)
+    qg = qs.reshape(b, sq, hkv, groups, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    # normalize mask (B?, 1, Sq, Sk) -> (B?, 1, 1, Sq, Sk) for the group axis
+    scores = jnp.where(mask[:, :, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def causal_mask(sq: int, sk: int, offset: int = 0,
+                window: int = 0) -> jax.Array:
+    """(1, 1, sq, sk) causal (+optional sliding window) mask."""
+    qi = jnp.arange(sq)[:, None] + offset
+    ki = jnp.arange(sk)[None, :]
+    m = ki <= qi
+    if window > 0:
+        m &= ki > qi - window
+    return m[None, None]
+
+
+def attend(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    rope: Optional[Tuple[jax.Array, jax.Array]] = None,
+    mode: str = "train",
+    cache: Optional[KVCache] = None,
+    pos: Optional[jax.Array] = None,      # decode: (B,) current positions
+    kv_x: Optional[jax.Array] = None,     # cross-attention source
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    b, s, _ = x.shape
+    h = cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+
+    if kv_x is not None:                          # cross-attention
+        q, _, _ = _proj_qkv(p, x, cfg)
+        _, k, v = _proj_qkv(p, kv_x, cfg)
+        if rope is not None:
+            q = apply_rope(q, *rope)
+        mask = jnp.ones((1, 1, s, k.shape[1]), bool)
+        out = _sdpa(q, k, v, mask, cfg)
+        return _wo(p, out, cfg), None
+
+    q, k, v = _proj_qkv(p, x, cfg)
+    if rope is not None:
+        q = apply_rope(q, *rope)
+        k = apply_rope(k, *rope)
+
+    if mode == "train":
+        mask = (causal_mask(s, s, 0, cfg.sliding_window)
+                if causal else jnp.ones((1, 1, s, s), bool))
+        out = _sdpa(q, k, v, mask, cfg)
+        return _wo(p, out, cfg), None
+
+    if mode == "prefill":
+        assert cache is not None
+        s_max = cache.k.shape[1]
+        k_pad = jnp.zeros_like(cache.k).at[:, :s].set(k.astype(cache.k.dtype))
+        v_pad = jnp.zeros_like(cache.v).at[:, :s].set(v.astype(cache.v.dtype))
+        k_pad = shard(k_pad, "batch", "kv_seq", "kv_heads", None)
+        v_pad = shard(v_pad, "batch", "kv_seq", "kv_heads", None)
+        mask = causal_mask(s, s, 0, cfg.sliding_window)
+        out = _sdpa(q, k, v, mask, cfg)
+        return _wo(p, out, cfg), KVCache(k=k_pad, v=v_pad)
+
+    if mode == "decode":
+        assert cache is not None and pos is not None
+        # write this step's k/v at pos (B,) with a where-mask.  (§Perf
+        # iteration C2 tried batched dynamic_update_slice here — REFUTED:
+        # vmapped dus lowers to scatter, which breaks in-place aliasing
+        # under SPMD and copies the whole cache; the masked select fuses
+        # into a single aliased pass instead.)
+        idx = pos[:, None, None, None]                     # (B,1,1,1)
+        seq_iota = jnp.arange(cache.k.shape[1])[None, :, None, None]
+        sel = seq_iota == idx
+        k_new = jnp.where(sel, k.astype(cache.k.dtype), cache.k)
+        v_new = jnp.where(sel, v.astype(cache.v.dtype), cache.v)
+        k_new = shard(k_new, "batch", "kv_seq", "kv_heads", None)
+        v_new = shard(v_new, "batch", "kv_seq", "kv_heads", None)
+        # attend over positions <= pos (and window if set)
+        ki = jnp.arange(cache.k.shape[1])[None, None, None, :]
+        mask = ki <= pos[:, None, None, None]
+        if cfg.sliding_window > 0:
+            mask &= ki > (pos[:, None, None, None] - cfg.sliding_window)
+        out = _sdpa(q, k_new, v_new, mask, cfg)
+        return _wo(p, out, cfg), KVCache(k=k_new, v=v_new)
+
+    raise ValueError(mode)
+
+
+def _wo(p: dict, out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, nq, h = out.shape
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, nq * h),
+                   p["wo"].astype(out.dtype))
+    return shard(y, "batch", "seq", "embed")
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, n_kv: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    h = cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, s_max, n_kv, h), dtype),
+        v=jnp.zeros((batch, s_max, n_kv, h), dtype))

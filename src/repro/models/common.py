@@ -1,0 +1,148 @@
+"""Shared model components: norms, embeddings, rotary embeddings (incl.
+M-RoPE), initializers.  Functional style — params are nested dicts of
+jnp arrays; every layer is (init, apply) pair."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def normal_init(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_rmsnorm(scale: jax.Array, x: jax.Array, z: jax.Array,
+                  eps: float) -> jax.Array:
+    """Mamba2's RMSNorm(x * silu(z)) output gate."""
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) -> cos/sin (..., S, head_dim/2) in f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int, theta: float,
+                 sections: Tuple[int, int, int]
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE.
+
+    positions: (3, B, S) — temporal / height / width position ids.  The
+    head_dim/2 frequency slots are split into three contiguous sections,
+    each driven by its own position stream.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    # select per-frequency position stream: (B, S, half)
+    pos_sel = positions.astype(jnp.float32)[sec_id, :, :]    # (half, B, S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)                   # (B, S, half)
+    ang = pos_sel * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, D); cos/sin (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings (n, d) f32."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def maybe_scan(body, carry, xs, use_scan: bool):
+    """``jax.lax.scan`` or a Python unroll over the stacked leading axis.
+
+    The unrolled path exists for the dry-run's roofline accounting: XLA's
+    ``cost_analysis`` counts a while-loop body ONCE (trip count ignored), so
+    per-layer FLOPs/bytes/collective costs are measured from small unrolled
+    lowerings and extrapolated to full depth (see launch/dryrun.py).
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array, mask: jax.Array
+                  ) -> jax.Array:
+    """Mean masked token cross-entropy, f32 accumulation."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,106 @@
+"""Mamba2 decoder-only LM (mamba2-2.7b) — attention-free, O(T) context."""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.common import (cross_entropy, dtype_of, maybe_scan,
+                                 normal_init, pdtype_of, rmsnorm,
+                                 rmsnorm_init)
+from repro.sharding import shard
+
+
+class SSMDecodeState(NamedTuple):
+    states: ssm_mod.SSMState     # leaves stacked (L, B, ...)
+    pos: jax.Array
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def _layer_init(self, key):
+        cfg, pdt = self.cfg, pdtype_of(self.cfg)
+        return {
+            "norm": rmsnorm_init(cfg.d_model, pdt),
+            "mamba": ssm_mod.mamba2_init(key, cfg, pdt),
+        }
+
+    def init(self, key) -> dict:
+        cfg, pdt = self.cfg, pdtype_of(self.cfg)
+        kE, kL = jax.random.split(key)
+        layers = jax.vmap(self._layer_init)(
+            jax.random.split(kL, cfg.num_layers))
+        return {
+            "embedding": normal_init(
+                kE, (cfg.vocab_size, cfg.d_model), 0.02, pdt),
+            "layers": layers,
+            "final_norm": rmsnorm_init(cfg.d_model, pdt),
+        }
+
+    def forward(self, params, tokens, remat: bool = True,
+                collect_state: bool = False):
+        cfg = self.cfg
+        x = params["embedding"][tokens].astype(dtype_of(cfg))
+        x = shard(x, "batch", "seq", "embed")
+        mode = "prefill" if collect_state else "train"
+
+        def body(x, lp):
+            h = rmsnorm(lp["norm"], x, cfg.norm_eps)
+            y, st = ssm_mod.mamba2_forward(
+                lp["mamba"], h, cfg, return_state=collect_state)
+            return x + y, st
+
+        if remat and not collect_state:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, states = maybe_scan(body, x, params["layers"], cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embedding"].astype(x.dtype))
+        logits = shard(logits, "batch", "seq", "vocab")
+        if collect_state:
+            return logits, states
+        return logits
+
+    def loss(self, params, batch, remat: bool = True) -> jax.Array:
+        logits = self.forward(params, batch["tokens"], remat=remat)
+        return cross_entropy(logits, batch["targets"], batch["mask"])
+
+    def prefill(self, params, tokens, s_max: int = 0
+                ) -> Tuple[jax.Array, SSMDecodeState]:
+        b, s = tokens.shape
+        logits, states = self.forward(params, tokens, remat=False,
+                                      collect_state=True)
+        return logits[:, -1:], SSMDecodeState(
+            states=states, pos=jnp.full((b,), s, jnp.int32))
+
+    def init_decode_state(self, batch: int, s_max: int = 0) -> SSMDecodeState:
+        cfg = self.cfg
+        one = ssm_mod.init_ssm_state(cfg, batch, dtype_of(cfg))
+        states = jax.tree.map(
+            lambda t: jnp.zeros((cfg.num_layers,) + t.shape, t.dtype), one)
+        return SSMDecodeState(states=states,
+                              pos=jnp.zeros((batch,), jnp.int32))
+
+    def decode_step(self, params, state: SSMDecodeState, token: jax.Array
+                    ) -> Tuple[jax.Array, SSMDecodeState]:
+        cfg = self.cfg
+        x = params["embedding"][token].astype(dtype_of(cfg))
+
+        def body(x, lp_st):
+            lp, st = lp_st
+            h = rmsnorm(lp["norm"], x, cfg.norm_eps)
+            y, new_st = ssm_mod.mamba2_step(lp["mamba"], h, cfg, st)
+            return x + y, new_st
+
+        x, new_states = maybe_scan(body, x, (params["layers"], state.states),
+                                   cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embedding"].astype(x.dtype))
+        return logits, SSMDecodeState(states=new_states, pos=state.pos + 1)

@@ -1,0 +1,50 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU MLP (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import normal_init
+from repro.sharding import shard
+
+
+def swiglu_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": normal_init(ks[0], (d, f), d ** -0.5, dtype),
+        "w_up": normal_init(ks[1], (d, f), d ** -0.5, dtype),
+        "w_down": normal_init(ks[2], (f, d), f ** -0.5, dtype),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    h = shard(jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u,
+              "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+    return shard(y, "batch", "seq", "embed")
+
+
+def gelu_mlp_init(key, cfg: ModelConfig, d_in=None, dtype=None) -> dict:
+    d = d_in or cfg.d_model
+    f = cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "fc1": normal_init(ks[0], (d, f), d ** -0.5, dtype),
+        "fc1_b": jnp.zeros((f,), dtype),
+        "fc2": normal_init(ks[1], (f, cfg.d_model), f ** -0.5, dtype),
+        "fc2_b": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["fc1"].astype(dt)) + p["fc1_b"].astype(dt)
+    h = shard(jax.nn.gelu(h.astype(jnp.float32)).astype(dt),
+              "batch", "seq", "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["fc2"].astype(dt)) + p["fc2_b"].astype(dt)
+    return shard(y, "batch", "seq", "embed")

@@ -1,0 +1,97 @@
+"""Mixture-of-experts SwiGLU FFN with top-k routing and capacity buffers.
+
+Expert-parallel layout: expert tensors carry a leading ``expert`` logical
+axis (sharded over the ``model`` mesh axis when divisible — qwen3's 128
+experts shard 16-way; grok-1's 8 experts fall back to tensor-parallel
+``mlp`` sharding inside each expert).  Dispatch/combine are dense einsums
+over one-hot capacity assignments, the standard GSPMD MoE formulation (XLA
+turns the dispatch einsum into an all-to-all under expert sharding).
+
+Routing: softmax over expert logits (f32), top-k per token, probabilities
+renormalized over the selected k (qwen3/grok convention), tokens beyond an
+expert's capacity are dropped (contribute zero; residual passes through) —
+the load-balancing auxiliary loss keeps drops rare.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import normal_init
+from repro.sharding import shard
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    e = cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": normal_init(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "moe_gate": normal_init(ks[1], (e, d, f), d ** -0.5, dtype),
+        "moe_up": normal_init(ks[2], (e, d, f), d ** -0.5, dtype),
+        "moe_down": normal_init(ks[3], (e, f, d), f ** -0.5, dtype),
+    }
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * tokens * m.top_k / m.num_experts)
+    return max(8, min(tokens, (c + 3) // 4 * 4))
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (y (B, S, d), aux_loss ())."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    cap = _capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (T, k)
+    top_p = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)            # renorm
+
+    # load-balancing aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = m.aux_loss_weight * e * jnp.sum(me * ce)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    flat_e = top_e.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)          # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot               # exclusive
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                    # (T*k,)
+    keep = pos < cap
+    pos = jnp.where(keep, pos, 0)
+
+    # dispatch: (E, cap, d) buffers
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    disp = jnp.zeros((e, cap, d), x.dtype)
+    disp = disp.at[flat_e, pos].add(
+        jnp.where(keep[:, None], xt[tok_idx], 0).astype(x.dtype))
+    disp = shard(disp, "expert", "capacity", "embed")
+
+    # expert computation (SwiGLU per expert)
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", disp, p["moe_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", disp, p["moe_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    h = shard(h, "expert", "capacity", "mlp")
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["moe_down"].astype(dt))
+    y_e = shard(y_e, "expert", "capacity", "embed")
+
+    # combine: weighted gather back to tokens
+    gathered = y_e[flat_e, pos]                                  # (T*k, d)
+    w = (top_p.reshape(-1) * keep).astype(jnp.float32)
+    yt = jnp.zeros((t, d), jnp.float32)
+    yt = yt.at[tok_idx].add(gathered.astype(jnp.float32) * w[:, None])
+    y = shard(yt.reshape(b, s, d).astype(x.dtype), "batch", "seq", "embed")
+    return y, aux

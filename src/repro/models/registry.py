@@ -1,0 +1,35 @@
+"""Uniform model interface over all families.
+
+``build_model(cfg)`` returns an object exposing:
+    init(key) -> params
+    loss(params, batch, remat=...) -> scalar        (train step core)
+    prefill(params, ...) -> (logits, decode_state)
+    decode_step(params, state, token) -> (logits, decode_state)
+    init_decode_state(batch, s_max) -> decode_state
+
+Batch dict keys by family (see launch.dryrun.input_specs):
+    dense/moe:  tokens, targets, mask
+    vlm:        + positions (3, B, S) M-RoPE position ids (stubbed)
+    encdec:     + frames (B, enc_ctx, d_model) stub frame embeddings
+    ssm/hybrid: tokens, targets, mask
+"""
+from __future__ import annotations
+
+from repro.config import (FAMILY_DENSE, FAMILY_ENCDEC, FAMILY_HYBRID,
+                          FAMILY_MOE, FAMILY_SSM, FAMILY_VLM, ModelConfig)
+from repro.models.mamba_lm import MambaLM
+from repro.models.transformer import CausalLM
+from repro.models.whisper import WhisperModel
+from repro.models.zamba2 import Zamba2Model
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
+        return CausalLM(cfg)
+    if cfg.family == FAMILY_ENCDEC:
+        return WhisperModel(cfg)
+    if cfg.family == FAMILY_SSM:
+        return MambaLM(cfg)
+    if cfg.family == FAMILY_HYBRID:
+        return Zamba2Model(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,258 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm.
+
+The SSD form computes the selective-SSM recurrence
+
+    h_t = exp(dt_t·A) h_{t-1} + dt_t · B_t ⊗ x_t        (per head, state N)
+    y_t = C_t · h_t + D · x_t
+
+as chunked matmuls (MXU-friendly): within a chunk the lower-triangular decay
+kernel L = exp(segsum(dt·A)) turns the recurrence into attention-like
+einsums; across chunks a short scan carries the (H, P, N) state.  This is
+the TPU-native realization — chunk length is a config knob that the §Perf
+loop tunes (trade intra-chunk O(Q²) FLOPs vs scan length T/Q).
+
+``ssd_scan_ref`` is the naive sequential oracle used by property tests;
+``step`` is the O(1) decode update sharing the same parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import gated_rmsnorm, normal_init
+from repro.sharding import shard
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array     # (B, W-1, conv_channels) rolling conv window
+    ssm: jax.Array      # (B, H, P, N) recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.ngroups * s.state_dim
+    return s, d_in, nheads, conv_ch
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> dict:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    # in_proj emits [z (d_in), xBC (conv_ch), dt (nheads)]
+    out_dim = d_in + conv_ch + nheads
+    return {
+        "in_proj": normal_init(ks[0], (d, out_dim), d ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (s.conv_width, conv_ch),
+                              s.conv_width ** -0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.linspace(1e-3, 1e-1, nheads), 1e-4, None))
+        ).astype(jnp.float32),
+        "ssm_norm": jnp.ones((d_in,), dtype),
+        "out_proj": normal_init(ks[3], (d_in, d), d_in ** -0.5, dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., L) -> (..., L, L) decay exponents.
+
+    seg[i, j] = sum_{t=j+1..i} x_t for j < i (the decay an input at j suffers
+    before being read at i), 0 on the diagonal, -inf above (causality)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), k=-1)
+    diag = jnp.eye(l, dtype=bool)
+    return jnp.where(mask, seg, jnp.where(diag, 0.0, -jnp.inf))
+
+
+def ssd_chunked(
+    xdt: jax.Array,    # (B, T, H, P)  — x already scaled by dt
+    a_dt: jax.Array,   # (B, T, H)     — dt * A  (negative)
+    bmat: jax.Array,   # (B, T, G, N)
+    cmat: jax.Array,   # (B, T, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,   # (B, H, P, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y (B,T,H,P), final state (B,H,P,N))."""
+    b, t, h, p = xdt.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    assert t % chunk == 0, (t, chunk)
+    c = t // chunk
+    rep = h // g
+    # expand groups to heads
+    bh = jnp.repeat(bmat, rep, axis=2)            # (B, T, H, N)
+    ch = jnp.repeat(cmat, rep, axis=2)
+
+    def r(x_, shape):
+        return x_.reshape(shape)
+
+    x_ = r(xdt, (b, c, chunk, h, p))
+    a_ = jnp.moveaxis(r(a_dt, (b, c, chunk, h)), -1, 2)   # (B, C, H, L)
+    b_ = r(bh, (b, c, chunk, h, n))
+    c_ = r(ch, (b, c, chunk, h, n))
+
+    a_cs = jnp.cumsum(a_, axis=-1)                        # (B, C, H, L)
+    # 1. intra-chunk (diagonal) term
+    lmat = jnp.exp(_segsum(a_))                           # (B, C, H, L, L)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp",
+                        c_, b_, lmat, x_)
+    # 2. per-chunk final states
+    decay = jnp.exp(a_cs[..., -1:] - a_cs)                # (B, C, H, L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", b_, decay, x_)
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cs[..., -1])                  # (B, C, H)
+
+    def scan_f(prev, inp):
+        st, dec = inp
+        new = prev * dec[..., None, None] + st
+        return new, prev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_f, h0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)         # (B, C, H, P, N)
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(a_cs)                           # (B, C, H, L)
+    y_off = jnp.einsum("bclhn,bchl,bchpn->bclhp",
+                       c_, state_decay, prev_states)
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y, final
+
+
+def ssd_scan_ref(xdt, a_dt, bmat, cmat, h0=None):
+    """Naive sequential oracle for property tests."""
+    b, t, h, p = xdt.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=2).astype(jnp.float32)
+    ch = jnp.repeat(cmat, rep, axis=2).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def f(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = (state * jnp.exp(a_t)[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", x_t, b_t))
+        y_t = jnp.einsum("bhpn,bhn->bhp", state, c_t)
+        return state, y_t
+
+    xs = (jnp.moveaxis(xdt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a_dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bh, 1, 0), jnp.moveaxis(ch, 1, 0))
+    final, ys = jax.lax.scan(f, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def _split_proj(p, x, cfg):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    z_xbc_dt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z = z_xbc_dt[..., :d_in]
+    xbc = z_xbc_dt[..., d_in:d_in + conv_ch]
+    dt = z_xbc_dt[..., d_in + conv_ch:]
+    return z, xbc, dt
+
+
+def _conv_full(p, xbc):
+    """Depthwise causal conv over (B, T, C) with static width."""
+    w = p["conv_w"].astype(jnp.float32)                   # (W, C)
+    width = w.shape[0]
+    x = xbc.astype(jnp.float32)
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return jax.nn.silu(out + p["conv_b"].astype(jnp.float32)
+                       ).astype(xbc.dtype)
+
+
+def mamba2_forward(
+    p: dict, x: jax.Array, cfg: ModelConfig,
+    state: Optional[SSMState] = None, return_state: bool = False,
+) -> Tuple[jax.Array, Optional[SSMState]]:
+    """Full-sequence Mamba2 block. x (B, T, d) -> (B, T, d)."""
+    import math as _math
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    b, t, _ = x.shape
+    z, xbc_raw, dt = _split_proj(p, x, cfg)
+    xbc = _conv_full(p, xbc_raw)
+    xs = xbc[..., :d_in]
+    bmat = xbc[..., d_in:d_in + s.ngroups * s.state_dim].reshape(
+        b, t, s.ngroups, s.state_dim)
+    cmat = xbc[..., d_in + s.ngroups * s.state_dim:].reshape(
+        b, t, s.ngroups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    xh = xs.reshape(b, t, nheads, s.head_dim)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    a_dt = dt * a[None, None, :]
+    chunk = _math.gcd(t, s.chunk)   # largest config chunk dividing T
+    h0 = state.ssm if state is not None else None
+    y, hfinal = ssd_chunked(xdt, a_dt, bmat, cmat, chunk, h0=h0)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = gated_rmsnorm(p["ssm_norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+    out = shard(out, "batch", "seq", "embed")
+    if not return_state:
+        return out, None
+    # keep last W-1 raw (pre-conv) xbc inputs for decode continuation
+    conv_tail = jnp.zeros((b, s.conv_width - 1, conv_ch), x.dtype)
+    take = min(s.conv_width - 1, t)
+    conv_tail = conv_tail.at[:, -take:].set(
+        xbc_raw[:, t - take:].astype(x.dtype))
+    return out, SSMState(conv=conv_tail, ssm=hfinal.astype(jnp.float32))
+
+
+def mamba2_step(
+    p: dict, x: jax.Array, cfg: ModelConfig, state: SSMState,
+) -> Tuple[jax.Array, SSMState]:
+    """O(1) decode step. x (B, 1, d) -> (B, 1, d)."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt = _split_proj(p, x, cfg)                   # (B,1,·)
+    window = jnp.concatenate([state.conv, xbc.astype(state.conv.dtype)],
+                             axis=1)                      # (B, W, C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
+    xbc1 = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xs = xbc1[:, :d_in]
+    bvec = xbc1[:, d_in:d_in + s.ngroups * s.state_dim].reshape(
+        b, s.ngroups, s.state_dim)
+    cvec = xbc1[:, d_in + s.ngroups * s.state_dim:].reshape(
+        b, s.ngroups, s.state_dim)
+    rep = nheads // s.ngroups
+    bh = jnp.repeat(bvec, rep, axis=1)                    # (B, H, N)
+    ch = jnp.repeat(cvec, rep, axis=1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, nheads, s.head_dim).astype(jnp.float32)
+    da = jnp.exp(dt1 * a[None, :])                        # (B,H)
+    h_new = (state.ssm * da[..., None, None]
+             + jnp.einsum("bhp,bhn->bhpn", xh * dt1[..., None], bh))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, ch)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = gated_rmsnorm(p["ssm_norm"], y, z, cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"].astype(x.dtype))
+    new_conv = window[:, 1:]
+    return out, SSMState(conv=new_conv, ssm=h_new)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                   ) -> SSMState:
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, nheads, s.head_dim, s.state_dim), jnp.float32))

@@ -1,0 +1,191 @@
+"""Decoder-only transformer: dense GQA (llama/yi/qwen/mistral), MoE
+(qwen3-moe/grok-1), and M-RoPE VLM backbone (qwen2-vl).
+
+Layers are homogeneous and scanned (``jax.lax.scan`` over stacked params) so
+the HLO stays O(1) in depth — essential for 88-layer configs on 512-device
+meshes.  KV caches are stacked per layer with a leading ``layers`` axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FAMILY_MOE, FAMILY_VLM, ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import moe_a2a
+from repro.models.common import (cross_entropy, dtype_of, maybe_scan,
+                                 mrope_angles, normal_init, pdtype_of,
+                                 rmsnorm, rmsnorm_init, rope_angles)
+from repro.sharding import shard
+
+
+class DecodeState(NamedTuple):
+    caches: attn.KVCache       # stacked (L, B, S, kv, hd)
+    pos: jax.Array             # (B,) next position to write
+
+
+class CausalLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def _layer_init(self, key) -> dict:
+        cfg = self.cfg
+        pdt = pdtype_of(cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "attn_norm": rmsnorm_init(cfg.d_model, pdt),
+            "attn": attn.attn_init(k1, cfg, dtype=pdt),
+            "ffn_norm": rmsnorm_init(cfg.d_model, pdt),
+        }
+        if cfg.family == FAMILY_MOE:
+            p["moe"] = moe_mod.moe_init(k2, cfg, pdt)
+        else:
+            p["mlp"] = mlp_mod.swiglu_init(k2, cfg, pdt)
+        return p
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        pdt = pdtype_of(cfg)
+        kE, kL, kH = jax.random.split(key, 3)
+        layer_keys = jax.random.split(kL, cfg.num_layers)
+        layers = jax.vmap(self._layer_init)(layer_keys)
+        params = {
+            "embedding": normal_init(
+                kE, (cfg.vocab_size, cfg.d_model), 0.02, pdt),
+            "layers": layers,
+            "final_norm": rmsnorm_init(cfg.d_model, pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = normal_init(
+                kH, (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5, pdt)
+        return params
+
+    # -- shared pieces -------------------------------------------------------
+    def _rope(self, positions: jax.Array):
+        cfg = self.cfg
+        if cfg.mrope:
+            if positions.ndim == 2:          # (B,S) -> same stream 3x
+                positions = jnp.broadcast_to(
+                    positions[None], (3,) + positions.shape)
+            return mrope_angles(positions, cfg.resolved_head_dim,
+                                cfg.rope_theta, cfg.mrope_sections)
+        return rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        x = params["embedding"][tokens].astype(dtype_of(cfg))
+        return shard(x, "batch", "seq", "embed")
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = (params["embedding"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+        return shard(logits, "batch", "seq", "vocab")
+
+    def _layer_apply(self, p, x, rope, mode, cache, pos):
+        cfg = self.cfg
+        h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+        a, new_cache = attn.attend(p["attn"], h, cfg, rope=rope, mode=mode,
+                                   cache=cache, pos=pos)
+        x = x + a
+        h = rmsnorm(p["ffn_norm"], x, cfg.norm_eps)
+        if cfg.family == FAMILY_MOE:
+            if moe_a2a.moe_impl() == "a2a":
+                f, aux = moe_a2a.moe_ffn_sharded(p["moe"], h, cfg)
+            else:
+                f, aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+        else:
+            f, aux = mlp_mod.swiglu(p["mlp"], h), jnp.float32(0.0)
+        return x + f, new_cache, aux
+
+    # -- train / full forward -----------------------------------------------
+    def forward(self, params, tokens, positions=None, remat: bool = True,
+                inputs_embeds=None) -> Tuple[jax.Array, jax.Array]:
+        """Full causal forward. Returns (logits (B,S,V), aux_loss ())."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = inputs_embeds if inputs_embeds is not None else self._embed(
+            params, tokens)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        rope = self._rope(positions)
+
+        def body(carry, lp):
+            x, aux = carry
+            x2, _, a = self._layer_apply(lp, x, rope, "train", None, None)
+            return (x2, aux + a), None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = maybe_scan(body, (x, jnp.float32(0.0)),
+                                 params["layers"], cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return self._logits(params, x), aux
+
+    def loss(self, params, batch, remat: bool = True) -> jax.Array:
+        logits, aux = self.forward(params, batch["tokens"],
+                                   positions=batch.get("positions"),
+                                   remat=remat,
+                                   inputs_embeds=batch.get("inputs_embeds"))
+        return cross_entropy(logits, batch["targets"], batch["mask"]) + aux
+
+    # -- serving -------------------------------------------------------------
+    def init_decode_state(self, batch: int, s_max: int) -> DecodeState:
+        cfg = self.cfg
+        one = attn.init_cache(cfg, batch, s_max, cfg.num_kv_heads,
+                              dtype_of(cfg))
+        caches = jax.tree.map(
+            lambda t: jnp.zeros((cfg.num_layers,) + t.shape, t.dtype), one)
+        return DecodeState(caches=caches, pos=jnp.zeros((batch,), jnp.int32))
+
+    def prefill(self, params, tokens, s_max: int, positions=None,
+                inputs_embeds=None) -> Tuple[jax.Array, DecodeState]:
+        """Run the prompt, fill caches. Returns (last-token logits, state)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = inputs_embeds if inputs_embeds is not None else self._embed(
+            params, tokens)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        rope = self._rope(positions)
+        empty = attn.init_cache(cfg, b, s_max, cfg.num_kv_heads,
+                                dtype_of(cfg))
+
+        def body(x, lp):
+            x2, cache, _ = self._layer_apply(lp, x, rope, "prefill", empty,
+                                             None)
+            return x2, cache
+
+        x, caches = maybe_scan(body, x, params["layers"], cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x[:, -1:, :])
+        return logits, DecodeState(
+            caches=caches, pos=jnp.full((b,), s, jnp.int32))
+
+    def decode_step(self, params, state: DecodeState, token: jax.Array,
+                    ) -> Tuple[jax.Array, DecodeState]:
+        """One greedy decode step. token (B, 1) -> (logits (B,1,V), state)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        x = self._embed(params, token)
+        rope = self._rope(state.pos[:, None])
+
+        def body(x, lp_cache):
+            lp, cache = lp_cache
+            x2, new_cache, _ = self._layer_apply(
+                lp, x, rope, "decode", cache, state.pos)
+            return x2, new_cache
+
+        x, caches = maybe_scan(body, x, (params["layers"], state.caches),
+                               cfg.scan_layers)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = self._logits(params, x)
+        return logits, DecodeState(caches=caches, pos=state.pos + 1)

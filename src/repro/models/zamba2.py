@@ -1,0 +1,238 @@
+"""Zamba2-style hybrid: Mamba2 trunk + ONE shared attention block applied
+every ``hybrid_attn_every`` Mamba layers.
+
+Layer layout for num_layers=81, attn_every=6:
+    [6×mamba, shared-attn] × 11 groups  +  4 trailing mamba layers
+(81 "layers" counts each shared-attn application).  The shared block is a
+full transformer block over ``concat(hidden, initial_embedding)`` (2·d wide
+— Zamba2's global skip), whose output is projected 2d→d into the residual.
+Weights are shared across applications; each application keeps its own KV
+cache.
+
+Scan structure: outer scan over groups, inner scan over the group's Mamba
+layers — HLO stays O(1) in depth while allowing the heterogeneous interleave.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.common import (cross_entropy, dtype_of, maybe_scan,
+                                 normal_init, pdtype_of, rmsnorm,
+                                 rmsnorm_init, rope_angles)
+from repro.sharding import shard
+
+
+class HybridDecodeState(NamedTuple):
+    ssm_grouped: ssm_mod.SSMState    # leaves (G, E, B, ...) grouped mamba
+    ssm_tail: ssm_mod.SSMState       # leaves (T, B, ...) trailing mamba
+    attn_caches: attn.KVCache        # (G, B, S_max, kv, hd)
+    pos: jax.Array                   # (B,)
+
+
+def _layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, per_group, n_tail_mamba)."""
+    per = cfg.hybrid_attn_every
+    groups = cfg.num_layers // (per + 1)
+    tail = cfg.num_layers - groups * (per + 1)
+    return groups, per, tail
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        # the shared attention block sees 2*d_model-wide inputs
+        self.attn_cfg = dataclasses.replace(cfg, d_model=2 * cfg.d_model)
+
+    def init(self, key) -> dict:
+        cfg, pdt = self.cfg, pdtype_of(self.cfg)
+        groups, per, tail = _layout(cfg)
+        kE, kM, kT, kA, k1, k2, k3 = jax.random.split(key, 7)
+
+        def mamba_init(k):
+            return {
+                "norm": rmsnorm_init(cfg.d_model, pdt),
+                "mamba": ssm_mod.mamba2_init(k, cfg, pdt),
+            }
+
+        mk = jax.random.split(kM, groups * per)
+        grouped = jax.vmap(mamba_init)(mk)
+        grouped = jax.tree.map(
+            lambda t: t.reshape((groups, per) + t.shape[1:]), grouped)
+        tk = jax.random.split(kT, max(tail, 1))
+        tail_p = jax.vmap(mamba_init)(tk)
+        d2 = 2 * cfg.d_model
+        shared = {
+            "attn_norm": rmsnorm_init(d2, pdt),
+            "attn": attn.attn_init(kA, self.attn_cfg, dtype=pdt),
+            "ffn_norm": rmsnorm_init(d2, pdt),
+            "fc1": normal_init(k1, (d2, cfg.d_ff), d2 ** -0.5, pdt),
+            "fc2": normal_init(k2, (cfg.d_ff, d2), cfg.d_ff ** -0.5, pdt),
+            "out_proj": normal_init(k3, (d2, cfg.d_model), d2 ** -0.5, pdt),
+        }
+        return {
+            "embedding": normal_init(
+                kE, (cfg.vocab_size, cfg.d_model), 0.02, pdt),
+            "grouped": grouped,
+            "tail": tail_p,
+            "shared": shared,
+            "final_norm": rmsnorm_init(cfg.d_model, pdt),
+        }
+
+    def _shared_block(self, sp, x, x0, rope, mode, cache, pos):
+        """Shared transformer block over concat(hidden, embedding) -> d."""
+        cfg = self.cfg
+        y = jnp.concatenate([x, x0], axis=-1)              # (B, S, 2d)
+        h = rmsnorm(sp["attn_norm"], y, cfg.norm_eps)
+        a, new_cache = attn.attend(sp["attn"], h, self.attn_cfg, rope=rope,
+                                   mode=mode, cache=cache, pos=pos)
+        y = y + a
+        h = rmsnorm(sp["ffn_norm"], y, cfg.norm_eps)
+        f = jnp.einsum("bsd,df->bsf", h, sp["fc1"].astype(h.dtype))
+        f = shard(jax.nn.gelu(f.astype(jnp.float32)).astype(h.dtype),
+                  "batch", "seq", "mlp")
+        y = y + jnp.einsum("bsf,fd->bsd", f, sp["fc2"].astype(h.dtype))
+        out = jnp.einsum("bse,ed->bsd", y, sp["out_proj"].astype(y.dtype))
+        return x + out, new_cache
+
+    def _mamba(self, lp, x, mode, state=None):
+        cfg = self.cfg
+        h = rmsnorm(lp["norm"], x, cfg.norm_eps)
+        if mode == "step":
+            y, new_state = ssm_mod.mamba2_step(lp["mamba"], h, cfg, state)
+            return x + y, new_state
+        y, new_state = ssm_mod.mamba2_forward(
+            lp["mamba"], h, cfg, return_state=(mode == "prefill"))
+        return x + y, new_state
+
+    # -- full forward -----------------------------------------------------
+    def forward(self, params, tokens, remat: bool = True,
+                collect_state: bool = False, s_max: int = 0):
+        cfg = self.cfg
+        groups, per, tail = _layout(cfg)
+        b, s = tokens.shape
+        x = params["embedding"][tokens].astype(dtype_of(cfg))
+        x = shard(x, "batch", "seq", "embed")
+        x0 = x
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        rope = rope_angles(positions, cfg.resolved_head_dim, cfg.rope_theta)
+        mode = "prefill" if collect_state else "train"
+        empty = (attn.init_cache(self.attn_cfg, b, s_max,
+                                 cfg.num_kv_heads, dtype_of(cfg))
+                 if collect_state else None)
+
+        def group_body(x, gp):
+            def inner(x, lp):
+                return self._mamba(lp, x, mode)
+            x, states = maybe_scan(inner, x, gp, cfg.scan_layers)
+            x, cache = self._shared_block(params["shared"], x, x0, rope,
+                                          mode, empty, None)
+            if collect_state:
+                return x, (states, cache)
+            return x, states
+
+        if remat and not collect_state:
+            group_body = jax.checkpoint(
+                group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, group_out = maybe_scan(group_body, x, params["grouped"],
+                                  cfg.scan_layers)
+
+        def tail_body(x, lp):
+            return self._mamba(lp, x, mode)
+
+        if tail > 0:
+            x, tail_states = maybe_scan(tail_body, x, params["tail"],
+                                        cfg.scan_layers)
+        else:
+            tail_states = jax.tree.map(
+                lambda t: jnp.zeros((1,) + t.shape, t.dtype),
+                ssm_mod.init_ssm_state(cfg, b, dtype_of(cfg)))
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embedding"].astype(x.dtype))
+        logits = shard(logits, "batch", "seq", "vocab")
+        if collect_state:
+            ssm_grouped, caches = group_out
+            return logits, (ssm_grouped, tail_states, caches)
+        return logits
+
+    def loss(self, params, batch, remat: bool = True) -> jax.Array:
+        logits = self.forward(params, batch["tokens"], remat=remat)
+        return cross_entropy(logits, batch["targets"], batch["mask"])
+
+    # -- serving -----------------------------------------------------------
+    def prefill(self, params, tokens, s_max: int
+                ) -> Tuple[jax.Array, HybridDecodeState]:
+        b, s = tokens.shape
+        logits, (ssm_g, ssm_t, caches) = self.forward(
+            params, tokens, remat=False, collect_state=True, s_max=s_max)
+        return logits[:, -1:], HybridDecodeState(
+            ssm_grouped=ssm_g, ssm_tail=ssm_t, attn_caches=caches,
+            pos=jnp.full((b,), s, jnp.int32))
+
+    def init_decode_state(self, batch: int, s_max: int) -> HybridDecodeState:
+        cfg = self.cfg
+        groups, per, tail = _layout(cfg)
+        one = ssm_mod.init_ssm_state(cfg, batch, dtype_of(cfg))
+        g_state = jax.tree.map(
+            lambda t: jnp.zeros((groups, per) + t.shape, t.dtype), one)
+        t_state = jax.tree.map(
+            lambda t: jnp.zeros((max(tail, 1),) + t.shape, t.dtype), one)
+        cache1 = attn.init_cache(self.attn_cfg, batch, s_max,
+                                 cfg.num_kv_heads, dtype_of(cfg))
+        caches = jax.tree.map(
+            lambda t: jnp.zeros((groups,) + t.shape, t.dtype), cache1)
+        return HybridDecodeState(
+            ssm_grouped=g_state, ssm_tail=t_state, attn_caches=caches,
+            pos=jnp.zeros((batch,), jnp.int32))
+
+    def decode_step(self, params, state: HybridDecodeState, token: jax.Array
+                    ) -> Tuple[jax.Array, HybridDecodeState]:
+        cfg = self.cfg
+        groups, per, tail = _layout(cfg)
+        b = token.shape[0]
+        x = params["embedding"][token].astype(dtype_of(cfg))
+        x0 = x
+        rope = rope_angles(state.pos[:, None].astype(jnp.float32),
+                           cfg.resolved_head_dim, cfg.rope_theta)
+
+        def group_body(x, inp):
+            gp, gstate, cache = inp
+
+            def inner(x, lp_st):
+                lp, st = lp_st
+                return self._mamba(lp, x, "step", st)
+
+            x, new_states = maybe_scan(inner, x, (gp, gstate),
+                                       cfg.scan_layers)
+            x, new_cache = self._shared_block(params["shared"], x, x0, rope,
+                                              "decode", cache, state.pos)
+            return x, (new_states, new_cache)
+
+        x, (new_g, new_caches) = maybe_scan(
+            group_body, x,
+            (params["grouped"], state.ssm_grouped, state.attn_caches),
+            cfg.scan_layers)
+
+        def tail_body(x, lp_st):
+            lp, st = lp_st
+            return self._mamba(lp, x, "step", st)
+
+        if tail > 0:
+            x, new_t = maybe_scan(tail_body, x,
+                                  (params["tail"], state.ssm_tail),
+                                  cfg.scan_layers)
+        else:
+            new_t = state.ssm_tail
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            params["embedding"].astype(x.dtype))
+        return logits, HybridDecodeState(
+            ssm_grouped=new_g, ssm_tail=new_t, attn_caches=new_caches,
+            pos=state.pos + 1)

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (adafactor_init, adafactor_update, adamw_init,  # noqa: F401
+                               adamw_update, apply_updates, make_optimizer)
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.grad import (clip_by_global_norm, global_norm,  # noqa: F401
+                              int8_compress, int8_decompress)

@@ -1,0 +1,122 @@
+"""Optimizers: AdamW (dtype-configurable moments, ZeRO-1 friendly) and
+Adafactor (factored second moments — lets 300B-class configs fit a pod).
+
+Functional, pytree-based; optimizer state leaves inherit the parameter
+sharding (GSPMD propagates it), which IS ZeRO-1 when params are FSDP-sharded.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.optim.schedule import warmup_cosine
+
+
+def adamw_init(params, tcfg: TrainConfig) -> dict:
+    mdt = jnp.dtype(tcfg.moment_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params),
+    }
+
+
+def adamw_update(grads, state: dict, params, tcfg: TrainConfig):
+    step = state["step"] + 1
+    lr = warmup_cosine(step, tcfg.learning_rate, tcfg.warmup_steps,
+                       tcfg.total_steps)
+    b1, b2, eps = tcfg.beta1, tcfg.beta2, tcfg.eps
+    mdt = jnp.dtype(tcfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / (1 - b1 ** step.astype(jnp.float32))
+        vhat = vf / (1 - b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:   # decoupled weight decay on matrices only
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * delta).astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    m = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[2], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return updates, {"step": step, "m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params, tcfg: TrainConfig) -> dict:
+    def rows(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if p.ndim >= 2
+                else jnp.zeros_like(p, dtype=jnp.float32))
+
+    def cols(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if p.ndim >= 2 else jnp.zeros((1,), jnp.float32))
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "vr": jax.tree.map(rows, params),
+        "vc": jax.tree.map(cols, params),
+    }
+
+
+def adafactor_update(grads, state: dict, params, tcfg: TrainConfig):
+    step = state["step"] + 1
+    lr = warmup_cosine(step, tcfg.learning_rate, tcfg.warmup_steps,
+                       tcfg.total_steps)
+    b2 = 1.0 - (step.astype(jnp.float32) ** -0.8)
+    eps = 1e-30
+
+    def upd(g, vr, vc, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + eps
+        if p.ndim >= 2:
+            nvr = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            nvc = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            r = nvr / jnp.maximum(
+                jnp.mean(nvr, axis=-1, keepdims=True), eps)
+            denom = jnp.sqrt(r[..., None] * nvc[..., None, :])
+        else:
+            nvr = b2 * vr + (1 - b2) * g2
+            nvc = vc
+            denom = jnp.sqrt(nvr)
+        delta = gf / jnp.maximum(denom, 1e-12)
+        # update clipping (Shazeer & Stern): RMS(delta) <= 1
+        rms = jnp.sqrt(jnp.mean(delta * delta) + 1e-12)
+        delta = delta / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            delta = delta + tcfg.weight_decay * p.astype(jnp.float32)
+        return (-lr * delta).astype(p.dtype), nvr, nvc
+
+    out = jax.tree.map(upd, grads, state["vr"], state["vc"], params)
+    updates = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    vr = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    vc = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    return updates, {"step": step, "vr": vr, "vc": vc}
+
+
+def make_optimizer(tcfg: TrainConfig):
+    if tcfg.optimizer == "adamw":
+        return adamw_init, adamw_update
+    if tcfg.optimizer == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(tcfg.optimizer)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

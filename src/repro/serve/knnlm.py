@@ -1,0 +1,95 @@
+"""kNN-LM decoding with Speed-ANN retrieval (the paper's technique as a
+first-class serving feature).
+
+A datastore maps LM hidden states -> next tokens (Khandelwal et al., 2020
+formulation).  At each decode step the current hidden state queries the
+Speed-ANN index; retrieval probabilities p_knn(w) ∝ Σ_{(h,w') : w'=w}
+exp(-d(h, q)/τ) are interpolated with the LM softmax:
+
+    p(w) = λ · p_knn(w) + (1 − λ) · p_lm(w)
+
+Building the datastore runs the model over a corpus and records
+(final-hidden-state, next-token) pairs; the index is a standard Speed-ANN
+NSG graph, so every optimization in core/ (staged parallel expansion,
+adaptive sync, walker sharding) accelerates kNN-LM serving directly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SearchConfig
+from repro.core import build_nsg, search_speedann_batch
+from repro.core.graph import PaddedCSR
+
+
+class KNNLMDatastore(NamedTuple):
+    graph: PaddedCSR          # Speed-ANN index over hidden states
+    values: jax.Array         # (N,) int32 next-token per datastore entry
+    vocab_size: int
+
+
+def build_datastore(model, params, token_batches, vocab_size: int,
+                    degree: int = 16) -> KNNLMDatastore:
+    """Run the model over batches, collect (hidden, next-token) pairs."""
+    keys, vals = [], []
+    hidden_fn = jax.jit(lambda p, t: _final_hidden(model, p, t))
+    for tokens in token_batches:
+        h = hidden_fn(params, tokens)              # (B, S, d)
+        b, s, d = h.shape
+        keys.append(np.asarray(h[:, :-1].reshape(-1, d), np.float32))
+        vals.append(np.asarray(tokens[:, 1:].reshape(-1), np.int32))
+    keys = np.concatenate(keys)
+    vals = np.concatenate(vals)
+    graph = build_nsg(keys, degree=degree, knn_k=degree,
+                      ef_construction=2 * degree, passes=1)
+    return KNNLMDatastore(graph=graph, values=jnp.asarray(vals),
+                          vocab_size=vocab_size)
+
+
+def _final_hidden(model, params, tokens):
+    """Final pre-logits hidden states (works for CausalLM/MambaLM)."""
+    from repro.models.common import rmsnorm
+    cfg = model.cfg
+    x = params["embedding"][tokens].astype(jnp.bfloat16)
+    if hasattr(model, "_rope"):   # CausalLM
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        rope = model._rope(positions)
+
+        def body(carry, lp):
+            h, _ = carry
+            h2, _, _ = model._layer_apply(lp, h, rope, "train", None, None)
+            return (h2, jnp.float32(0)), None
+        (x, _), _ = jax.lax.scan(body, (x, jnp.float32(0)),
+                                 params["layers"])
+        return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    raise NotImplementedError(type(model))
+
+
+def knnlm_logits(
+    ds: KNNLMDatastore, hidden: jax.Array, lm_logits: jax.Array,
+    cfg: SearchConfig, lam: float = 0.25, tau: float = 10.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Interpolate LM logits with Speed-ANN retrieval.
+
+    hidden (B, d); lm_logits (B, V).  Returns (mixed log-probs (B, V),
+    retrieved ids (B, k)).
+    """
+    ids, dists, _ = search_speedann_batch(
+        ds.graph, hidden.astype(jnp.float32), cfg)
+    n = ds.graph.n_nodes
+    safe = jnp.minimum(ids, n - 1)
+    toks = ds.values[safe]                               # (B, k)
+    valid = ids < n
+    w = jnp.where(valid, jax.nn.softmax(
+        jnp.where(valid, -dists / tau, -jnp.inf), axis=-1), 0.0)
+    p_knn = jax.vmap(
+        lambda t, ww: jnp.zeros((ds.vocab_size,), jnp.float32)
+        .at[t].add(ww))(toks, w)
+    p_lm = jax.nn.softmax(lm_logits.astype(jnp.float32), axis=-1)
+    mixed = lam * p_knn + (1.0 - lam) * p_lm
+    return jnp.log(jnp.maximum(mixed, 1e-20)), ids

@@ -1,0 +1,2 @@
+from repro.train.train_step import make_train_step, TrainState  # noqa: F401
+from repro.train.trainer import Trainer  # noqa: F401

@@ -1,0 +1,128 @@
+"""The jitted training step: loss -> grads -> clip -> optimizer update.
+
+Supports microbatch gradient accumulation (scan over microbatches — the
+standard memory/throughput knob), remat policies, and an explicit-DP variant
+with int8-compressed gradient all-reduce (shard_map over the data axis) for
+bandwidth-constrained cross-pod training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import TrainConfig
+from repro.optim import (clip_by_global_norm, make_optimizer, apply_updates)
+from repro.optim.adamw import adamw_init
+from repro.optim.grad import compressed_psum
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: dict
+    # int8 error-feedback residuals (only allocated when compression is on)
+    err: Optional[dict]
+
+
+# which axis of each batch entry is the batch dimension (default 0);
+# M-RoPE position ids are (3, B, S)
+BATCH_AXIS = {"positions": 1}
+
+
+def _mb_split(x, m: int, axis: int):
+    """Split ``axis`` into (m, axis//m) and move the microbatch dim front."""
+    shape = x.shape
+    new = shape[:axis] + (m, shape[axis] // m) + shape[axis + 1:]
+    return jnp.moveaxis(x.reshape(new), axis, 0)
+
+
+def init_train_state(model, key, tcfg: TrainConfig) -> TrainState:
+    params = model.init(key)
+    opt_init, _ = make_optimizer(tcfg)
+    err = None
+    if tcfg.grad_compression == "int8":
+        err = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return TrainState(params=params, opt=opt_init(params, tcfg), err=err)
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    """GSPMD train step (sharding via in_shardings on params/batch)."""
+    _, opt_update = make_optimizer(tcfg)
+    remat = tcfg.remat != "none"
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def train_step(state: TrainState, batch):
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+                acc_loss, acc_g = carry
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params))
+            mbs = {k: _mb_split(v, tcfg.microbatches, BATCH_AXIS.get(k, 0))
+                   for k, v in batch.items()}
+            (loss, grads), _ = jax.lax.scan(micro, zero, mbs)
+            loss = loss / tcfg.microbatches
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        updates, opt = opt_update(grads, state.opt, state.params, tcfg)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt["step"].astype(jnp.float32)}
+        return TrainState(params=params, opt=opt, err=state.err), metrics
+
+    return train_step
+
+
+def make_compressed_dp_train_step(model, tcfg: TrainConfig, mesh: Mesh,
+                                  data_axis: str = "data"):
+    """Explicit-DP train step with int8 gradient all-reduce + error feedback.
+
+    Params replicated; batch sharded over ``data_axis``; each shard computes
+    local grads, the all-reduce moves int8 (4× fewer bytes), and the
+    optimizer applies identical updates everywhere.
+    """
+    _, opt_update = make_optimizer(tcfg)
+
+    def shard_body(params, opt, err, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=tcfg.remat != "none")
+        )(params)
+        mean_grads, new_err = compressed_psum(grads, data_axis, err)
+        mean_grads, gnorm = clip_by_global_norm(mean_grads, tcfg.grad_clip)
+        updates, opt = opt_update(mean_grads, opt, params, tcfg)
+        params = apply_updates(params, updates)
+        loss = jax.lax.pmean(loss, data_axis)
+        return params, opt, new_err, {"loss": loss, "grad_norm": gnorm}
+
+    rep = None  # replicated spec tree built at call time
+
+    @jax.jit
+    def train_step(state: TrainState, batch):
+        prep = jax.tree.map(lambda _: P(), state.params)
+        popt = jax.tree.map(lambda _: P(), state.opt)
+        perr = jax.tree.map(lambda _: P(), state.err)
+        pbatch = jax.tree.map(lambda _: P(data_axis), batch)
+        fn = jax.shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(prep, popt, perr, pbatch),
+            out_specs=(prep, popt, perr,
+                       {"loss": P(), "grad_norm": P()}),
+            check_vma=False)
+        params, opt, err, metrics = fn(state.params, state.opt, state.err,
+                                       batch)
+        return TrainState(params, opt, err), metrics
+
+    return train_step

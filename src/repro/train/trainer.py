@@ -1,0 +1,91 @@
+"""Fault-tolerant training loop.
+
+Responsibilities:
+  * periodic async checkpoints (atomic, keep-k) + auto-resume from latest,
+  * failure recovery: any exception in a step (device loss, preemption —
+    simulated via ``runtime.failures`` in tests) triggers restore-from-last-
+    checkpoint and continues, up to ``max_recoveries``,
+  * elastic restart: ``resume(mesh)`` re-shards the restored state onto
+    whatever mesh the job now has (more or fewer devices),
+  * data pipeline resumption (step-seeded synthetic stream restarts exactly).
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import TrainConfig
+from repro.data.tokens import TokenStream, _batch_at
+from repro.train.train_step import (TrainState, init_train_state,
+                                    make_train_step)
+
+log = logging.getLogger("repro.trainer")
+
+
+class Trainer:
+    def __init__(self, model, tcfg: TrainConfig, stream: TokenStream,
+                 train_step: Optional[Callable] = None,
+                 max_recoveries: int = 3):
+        self.model = model
+        self.tcfg = tcfg
+        self.stream = stream
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir,
+                                      keep=tcfg.keep_checkpoints)
+        self.train_step = train_step or jax.jit(make_train_step(model, tcfg))
+        self.max_recoveries = max_recoveries
+        self.metrics_log = []
+
+    def init_or_resume(self, shardings=None) -> tuple[TrainState, int]:
+        state = init_train_state(self.model, jax.random.PRNGKey(
+            self.tcfg.seed), self.tcfg)
+        restored, step = self.ckpt.restore_latest(state, shardings)
+        if restored is not None:
+            log.info("resumed from checkpoint step %d", step)
+            return restored, step
+        return state, 0
+
+    def run(self, steps: Optional[int] = None,
+            fault_hook: Optional[Callable[[int], None]] = None
+            ) -> TrainState:
+        """Run to ``steps`` (default tcfg.total_steps) with auto-recovery.
+
+        ``fault_hook(step)`` is called before each step; tests raise from it
+        to simulate worker failures / preemptions.
+        """
+        steps = steps or self.tcfg.total_steps
+        state, start = self.init_or_resume()
+        step = start
+        recoveries = 0
+        while step < steps:
+            try:
+                if fault_hook is not None:
+                    fault_hook(step)
+                batch = jax.tree.map(
+                    lambda x: jax.numpy.asarray(x),
+                    _batch_at(self.stream, step))
+                state, metrics = self.train_step(state, batch)
+                self.metrics_log.append(
+                    {k: float(np.asarray(v)) for k, v in metrics.items()})
+                step += 1
+                if step % self.tcfg.checkpoint_every == 0 or step == steps:
+                    self.ckpt.save(step, state)
+            except Exception as e:  # noqa: BLE001 — recovery path
+                recoveries += 1
+                log.warning("step %d failed (%s); recovery %d/%d",
+                            step, e, recoveries, self.max_recoveries)
+                if recoveries > self.max_recoveries:
+                    raise
+                restored, ck_step = self.ckpt.restore_latest(
+                    init_train_state(self.model, jax.random.PRNGKey(
+                        self.tcfg.seed), self.tcfg))
+                if restored is None:
+                    state, step = self.init_or_resume()
+                else:
+                    state, step = restored, ck_step
+        self.ckpt.wait()
+        return state

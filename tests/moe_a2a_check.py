@@ -1,0 +1,55 @@
+"""Subprocess body: shard_map MoE (a2a + tp paths) vs the einsum reference.
+
+With generous capacity both paths must match moe.moe_ffn numerically.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import dataclasses                     # noqa: E402
+import jax                             # noqa: E402
+import jax.numpy as jnp                # noqa: E402
+import numpy as np                     # noqa: E402
+
+from repro.config import ModelConfig, MoEConfig, FAMILY_MOE  # noqa: E402
+from repro.models import moe as moe_mod                      # noqa: E402
+from repro.models import moe_a2a                             # noqa: E402
+from repro.sharding import DEFAULT_RULES, use_rules          # noqa: E402
+
+
+def check(num_experts: int, label: str):
+    cfg = ModelConfig(
+        name="t", family=FAMILY_MOE, num_layers=1, d_model=32,
+        num_heads=4, num_kv_heads=2, d_ff=16, vocab_size=64,
+        moe=MoEConfig(num_experts=num_experts, top_k=2,
+                      capacity_factor=8.0))
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.float32)
+
+    y_ref, aux_ref = moe_mod.moe_ffn(p, x, cfg)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with use_rules(DEFAULT_RULES, mesh):
+        y_sh, aux_sh = jax.jit(
+            lambda pp, xx: moe_a2a.moe_ffn_sharded(pp, xx, cfg))(p, x)
+    np.testing.assert_allclose(np.asarray(y_sh), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_sh), float(aux_ref),
+                               rtol=1e-3, atol=1e-4)
+    print(f"OK {label} experts={num_experts} "
+          f"maxdiff={np.abs(np.asarray(y_sh) - np.asarray(y_ref)).max():.2e}")
+
+
+def main():
+    assert len(jax.devices()) == 8
+    check(8, "a2a")    # 8 experts / 4-wide model axis -> 2 local experts
+    check(2, "tp")     # 2 experts < 4 devices -> tensor-parallel path
+    print("ALL_MOE_A2A_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Distributed-search integration (runs in a subprocess with 8 forced host
+devices, so the main pytest process keeps the default single device)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_distributed_search_all_modes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_check.py")],
+        capture_output=True, text=True, timeout=540, env=env)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL_DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr

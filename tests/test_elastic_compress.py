@@ -1,0 +1,21 @@
+"""Elastic resharding + int8-compressed DP train step (8-device subprocess,
+keeping the main pytest process on 1 device)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_elastic_and_compressed_dp():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "elastic_compress_check.py")],
+        capture_output=True, text=True, timeout=540, env=env)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL_ELASTIC_COMPRESS_OK" in out.stdout, out.stdout + out.stderr

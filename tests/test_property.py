@@ -1,0 +1,134 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import queue as fq
+from repro.core import visited as vs
+from repro.core.metrics import recall_at_k
+
+INVALID = 2**31 - 1
+
+
+def random_inserts(rng, rounds, cap, idmax=1000):
+    f = fq.make_frontier(cap)
+    inserted = {}
+    for _ in range(rounds):
+        n = rng.randint(1, 6)
+        ids = rng.choice(idmax, size=n)
+        dists = rng.uniform(0, 10, size=n).astype(np.float32)
+        for i, d in zip(ids, dists):
+            if int(i) not in inserted:
+                inserted[int(i)] = float(d)
+        # same id must present the same distance (as in real search)
+        dists = np.asarray([inserted[int(i)] for i in ids], np.float32)
+        f, _, _ = fq.insert(f, jnp.asarray(ids, jnp.int32),
+                            jnp.asarray(dists))
+    return f, inserted
+
+
+@given(seed=st.integers(0, 10_000), cap=st.sampled_from([4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_frontier_always_holds_global_topL(seed, cap):
+    """After any insert sequence the frontier == top-L of everything seen."""
+    rng = np.random.RandomState(seed)
+    f, inserted = random_inserts(rng, rounds=6, cap=cap)
+    ids = np.asarray(f.ids)
+    dists = np.asarray(f.dists)
+    want = sorted(inserted.items(), key=lambda kv: (kv[1], kv[0]))[:cap]
+    got = [(int(i), float(d)) for i, d in zip(ids, dists) if i != INVALID]
+    assert len(got) == min(len(inserted), cap)
+    for (gi, gd), (wi, wd) in zip(got, want):
+        assert gi == wi and abs(gd - wd) < 1e-5
+    # sorted ascending (finite prefix; inf-padded tail), no duplicate ids
+    finite = dists[np.isfinite(dists)]
+    assert (np.diff(finite) >= -1e-6).all()
+    assert np.isfinite(dists[:len(finite)]).all()
+    real = ids[ids != INVALID]
+    assert len(set(real.tolist())) == len(real)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_select_never_returns_checked_or_invalid(seed):
+    rng = np.random.RandomState(seed)
+    f, _ = random_inserts(rng, rounds=4, cap=16)
+    for _ in range(5):
+        m = rng.randint(1, 4)
+        before = ~np.asarray(f.checked)
+        f, active, valid = fq.select_unchecked(f, 4, m=jnp.int32(m))
+        a, v = np.asarray(active), np.asarray(valid)
+        assert v.sum() <= m
+        assert (a[~v] == INVALID).all()
+        assert (a[v] != INVALID).all()
+    # eventually everything is checked
+    for _ in range(16):
+        f, _, _ = fq.select_unchecked(f, 4)
+    assert not bool(fq.has_unchecked(f))
+
+
+@given(seed=st.integers(0, 10_000), w=st.sampled_from([2, 3, 4]))
+@settings(max_examples=15, deadline=None)
+def test_scatter_merge_preserves_content(seed, w):
+    """scatter -> merge loses nothing and re-checks nothing."""
+    rng = np.random.RandomState(seed)
+    f, _ = random_inserts(rng, rounds=5, cap=16)
+    f, _, _ = fq.select_unchecked(f, 4)
+    before_ids = set(np.asarray(f.ids)[np.asarray(f.ids) != INVALID].tolist())
+    before_checked = {int(i) for i, c in zip(np.asarray(f.ids),
+                                             np.asarray(f.checked))
+                      if i != INVALID and c}
+    ls = fq.scatter_round_robin(f, w)
+    merged, _ = fq.merge_frontiers(ls)
+    after_ids = set(np.asarray(merged.ids)[
+        np.asarray(merged.ids) != INVALID].tolist())
+    after_checked = {int(i) for i, c in zip(np.asarray(merged.ids),
+                                            np.asarray(merged.checked))
+                     if i != INVALID and c}
+    assert after_ids == before_ids
+    assert after_checked == before_checked
+
+
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from(["bitmap", "hash"]))
+@settings(max_examples=15, deadline=None)
+def test_visited_never_false_positive(seed, mode):
+    """A fresh=False verdict implies the id really was seen before (bitmap);
+    hash mode may duplicate (benign) but must never lose recall-critical
+    inserts silently: a fresh id is queryable afterwards."""
+    rng = np.random.RandomState(seed)
+    v = vs.make_visited(mode, 500, hash_bits=10)
+    seen = set()
+    for _ in range(6):
+        ids = rng.choice(500, size=8).astype(np.int32)
+        valid = rng.rand(8) > 0.2
+        v, fresh = vs.check_and_insert(v, jnp.asarray(ids),
+                                       jnp.asarray(valid))
+        fresh = np.asarray(fresh)
+        for i, (id_, ok, fr) in enumerate(zip(ids, valid, fresh)):
+            if not ok:
+                assert not fr
+            elif not fr and mode == "bitmap":
+                # claimed already-visited -> must actually have been seen
+                assert int(id_) in seen or id_ in ids[:i][valid[:i]]
+            if ok and fr:
+                seen.add(int(id_))
+    # everything marked fresh is now definitely visited (no forgetting)
+    if mode == "bitmap":
+        ids = jnp.asarray(sorted(seen), jnp.int32)
+        if len(seen):
+            v2, fresh2 = vs.check_and_insert(
+                v, ids, jnp.ones((len(seen),), bool))
+            assert not np.asarray(fresh2).any()
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_recall_bounds(seed):
+    rng = np.random.RandomState(seed)
+    gt = rng.choice(1000, size=(4, 10), replace=False)
+    assert recall_at_k(gt, gt, 10) == 1.0
+    other = gt + 5000
+    assert recall_at_k(other, gt, 10) == 0.0
+    assert 0.0 <= recall_at_k(rng.randint(0, 50, (4, 10)), gt, 10) <= 1.0

@@ -1,0 +1,109 @@
+"""Frontier-queue invariants (insert/dedup/select/merge)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import queue as fq
+
+
+def as_np(f):
+    return (np.asarray(f.ids), np.asarray(f.dists), np.asarray(f.checked))
+
+
+def test_insert_sorts_and_truncates():
+    f = fq.make_frontier(4)
+    f, up, n = fq.insert(f, jnp.array([5, 3, 9, 7, 1]),
+                         jnp.array([0.5, 0.3, 0.9, 0.7, 0.1]))
+    ids, dists, checked = as_np(f)
+    assert list(ids) == [1, 3, 5, 7]
+    assert np.allclose(dists, [0.1, 0.3, 0.5, 0.7])
+    assert not checked.any()
+    assert int(up) == 0
+    assert int(n) == 4
+
+
+def test_insert_dedup_prefers_existing_checked():
+    f = fq.make_frontier(4)
+    f, _, _ = fq.insert(f, jnp.array([3]), jnp.array([0.3]))
+    f, a, v = fq.select_unchecked(f, 1)          # marks 3 checked
+    f, up, n = fq.insert(f, jnp.array([3, 4]), jnp.array([0.3, 0.4]))
+    ids, dists, checked = as_np(f)
+    assert list(ids[:2]) == [3, 4]
+    assert checked[0] and not checked[1]          # 3 stays checked
+    assert int(n) == 1                            # only 4 was new
+
+
+def test_insert_update_position_saturates():
+    f = fq.make_frontier(3)
+    f, _, _ = fq.insert(f, jnp.array([1, 2, 3]), jnp.array([0.1, 0.2, 0.3]))
+    # all new candidates are worse than capacity -> update position == L
+    f, up, n = fq.insert(f, jnp.array([9, 8]), jnp.array([9.0, 8.0]))
+    assert int(up) == 3
+    assert int(n) == 0
+
+
+def test_select_unchecked_marks_and_orders():
+    f = fq.make_frontier(8)
+    f, _, _ = fq.insert(f, jnp.arange(5), jnp.array([0.5, 0.1, 0.4, 0.2, 0.3]))
+    f, active, valid = fq.select_unchecked(f, 3)
+    assert list(np.asarray(active)) == [1, 3, 4]   # by distance order
+    assert np.asarray(valid).all()
+    assert not bool(fq.top_k_stable(f, 5))
+    f, active2, valid2 = fq.select_unchecked(f, 3)
+    assert list(np.asarray(active2)[np.asarray(valid2)]) == [2, 0]
+    assert bool(fq.top_k_stable(f, 5))
+    assert not bool(fq.has_unchecked(f))
+
+
+def test_select_unchecked_dynamic_m():
+    f = fq.make_frontier(8)
+    f, _, _ = fq.insert(f, jnp.arange(5), jnp.full((5,), 0.1) * jnp.arange(5))
+    f, active, valid = fq.select_unchecked(f, 4, m=jnp.int32(2))
+    assert int(np.asarray(valid).sum()) == 2
+
+
+def test_scatter_and_merge_roundtrip():
+    f = fq.make_frontier(6)
+    f, _, _ = fq.insert(f, jnp.arange(6),
+                        jnp.array([0.1, 0.2, 0.3, 0.4, 0.5, 0.6]))
+    f, _, _ = fq.select_unchecked(f, 2)           # 0, 1 checked
+    ls = fq.scatter_round_robin(f, 2)
+    assert ls.ids.shape == (2, 6)
+    # each unchecked candidate appears in exactly one walker queue, unchecked
+    unchecked_sets = []
+    for w in range(2):
+        ids = np.asarray(ls.ids[w])
+        ch = np.asarray(ls.checked[w])
+        unchecked_sets.append(set(ids[(~ch) & (ids != 2**31 - 1)].tolist()))
+    assert unchecked_sets[0] & unchecked_sets[1] == set()
+    assert unchecked_sets[0] | unchecked_sets[1] == {2, 3, 4, 5}
+    merged, dups = fq.merge_frontiers(ls)
+    ids, dists, checked = as_np(merged)
+    assert list(ids) == [0, 1, 2, 3, 4, 5]
+    assert checked[0] and checked[1] and not checked[2:].any()
+    # checked entries were replicated to both walkers -> counted as dups
+    assert int(dups) == 2
+
+
+def test_scatter_active_subset():
+    f = fq.make_frontier(6)
+    f, _, _ = fq.insert(f, jnp.arange(6), 0.1 * jnp.arange(6, dtype=jnp.float32))
+    ls = fq.scatter_round_robin(f, 4, active=jnp.int32(1))
+    # only walker 0 has unchecked work
+    has = [bool(fq.has_unchecked(jax.tree.map(lambda x: x[w], ls)))
+           for w in range(4)]
+    assert has == [True, False, False, False]
+
+
+def test_merge_prefers_checked_on_dup():
+    a = fq.make_frontier(4)
+    a, _, _ = fq.insert(a, jnp.array([7]), jnp.array([0.7]))
+    a, _, _ = fq.select_unchecked(a, 1)
+    b = fq.make_frontier(4)
+    b, _, _ = fq.insert(b, jnp.array([7]), jnp.array([0.7]))
+    stacked = jax.tree.map(lambda x, y: jnp.stack([x, y]), a, b)
+    merged, dups = fq.merge_frontiers(stacked)
+    assert int(merged.ids[0]) == 7
+    assert bool(merged.checked[0])
+    assert int(dups) == 1

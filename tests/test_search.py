@@ -1,0 +1,119 @@
+"""End-to-end search behaviour: BFiS, top-M, Speed-ANN (Algorithm 3).
+
+Validates the paper's core claims at test scale:
+  * all searchers reach high recall on an NSG-style index;
+  * Speed-ANN converges in far fewer global steps than BFiS (Fig. 5);
+  * staged search cuts distance computations vs fixed-M (Fig. 8);
+  * adaptive sync computes less than no-sync (Table 2).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SearchConfig
+from repro.core import (bfis_search_batch, build_nsg, build_hnsw,
+                        hnsw_search_batch, recall_at_k, search_speedann_batch,
+                        search_topm_batch, variant)
+from repro.data import make_vector_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("sift", n=3000, n_queries=32, k=10, dim=32,
+                               n_clusters=32, seed=0)
+
+
+@pytest.fixture(scope="module")
+def graph(ds):
+    return build_nsg(ds.base, degree=24, knn_k=24, ef_construction=48,
+                     passes=2)
+
+
+BASE = SearchConfig(k=10, queue_len=64, m_max=4, num_walkers=4,
+                    max_steps=256, local_steps=8, sync_ratio=0.8)
+
+
+def test_bfis_reaches_high_recall(ds, graph):
+    ids, dists, stats = bfis_search_batch(graph, jnp.asarray(ds.queries), BASE)
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.9, f"BFiS recall {r}"
+    # distances are sorted and match exact distances for found ids
+    d = np.asarray(dists)
+    assert (np.diff(d, axis=1) >= -1e-5).all()
+
+
+def test_topm_matches_bfis_recall_fewer_steps(ds, graph):
+    q = jnp.asarray(ds.queries)
+    _, _, s1 = bfis_search_batch(graph, q, BASE)
+    ids, _, sm = search_topm_batch(graph, q, BASE.with_(m_max=4, staged=False))
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.9
+    # Fig. 5: parallel expansion converges in fewer steps
+    assert float(np.mean(np.asarray(sm.steps))) < \
+        0.6 * float(np.mean(np.asarray(s1.steps)))
+
+
+def test_staged_reduces_distance_comps(ds, graph):
+    q = jnp.asarray(ds.queries)
+    cfg = BASE.with_(m_max=8)
+    _, _, s_fixed = search_topm_batch(graph, q, cfg.with_(staged=False))
+    ids, _, s_staged = search_topm_batch(graph, q, cfg.with_(staged=True))
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.9
+    # Fig. 8a: staging avoids over-expansion
+    assert float(np.mean(np.asarray(s_staged.dist_comps))) < \
+        float(np.mean(np.asarray(s_fixed.dist_comps)))
+
+
+def test_speedann_recall_and_convergence(ds, graph):
+    q = jnp.asarray(ds.queries)
+    ids, dists, st = search_speedann_batch(graph, q, BASE)
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.9, f"Speed-ANN recall {r}"
+    _, _, s1 = bfis_search_batch(graph, q, BASE)
+    # global sync rounds << BFiS sequential steps (Fig. 5b analog)
+    assert float(np.mean(np.asarray(st.steps))) < \
+        0.5 * float(np.mean(np.asarray(s1.steps)))
+
+
+def test_adaptive_sync_cheaper_than_nosync(ds, graph):
+    q = jnp.asarray(ds.queries)
+    cfg = BASE.with_(num_walkers=8, m_max=8)
+    _, _, s_no = search_speedann_batch(graph, q, variant(cfg, "nosync"))
+    ids, _, s_ad = search_speedann_batch(graph, q, variant(cfg, "adaptive"))
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.9
+    # Table 2: adaptive sync does fewer distance computations than no-sync
+    assert float(np.mean(np.asarray(s_ad.dist_comps))) <= \
+        float(np.mean(np.asarray(s_no.dist_comps)))
+
+
+def test_hnsw_baseline(ds):
+    idx = build_hnsw(ds.base, degree=24)
+    ids, _, _ = hnsw_search_batch(idx, jnp.asarray(ds.queries), BASE)
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.9, f"HNSW recall {r}"
+
+
+@pytest.mark.parametrize("mode", ["bitmap", "hash", "loose"])
+def test_visited_modes_agree_on_recall(ds, graph, mode):
+    q = jnp.asarray(ds.queries)
+    ids, _, st = search_speedann_batch(
+        graph, q, BASE.with_(visited_mode=mode))
+    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
+    assert r >= 0.85, f"{mode} recall {r}"
+
+
+def test_results_sorted_and_exact_distances(ds, graph):
+    q = jnp.asarray(ds.queries)
+    ids, dists, _ = search_speedann_batch(graph, q, BASE)
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    for b in range(ids.shape[0]):
+        for j in range(ids.shape[1]):
+            if ids[b, j] >= ds.base.shape[0]:
+                continue
+            exact = float(((ds.base[ids[b, j]] - ds.queries[b]) ** 2).sum())
+            assert abs(exact - float(dists[b, j])) < 1e-2 * max(exact, 1.0)
