@@ -1,0 +1,90 @@
+"""Distance-backend sweep: ref vs rowgather vs dma in the real search loop.
+
+``PYTHONPATH=src python -m benchmarks.run --sweep-backends``
+
+Runs the same top-M search (and the full Speed-ANN searcher) with every
+registered distance backend and records per-backend wall time, recall, and
+parity against the ``ref`` backend into ``BENCH_dist_backend.json`` — the
+trajectory file future kernel PRs append to.  On this CPU container the
+Pallas backends run in interpret mode, so absolute times measure the
+emulation, not Mosaic; the JSON keeps ``interpret`` alongside each row so
+TPU runs are distinguishable in the trajectory.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, nsg_index, time_batched
+from repro.config import SearchConfig
+from repro.core import (recall_at_k, search_speedann_batch,
+                        search_topm_batch)
+from repro.kernels import available_backends
+from repro.kernels import ops as kops
+
+K = 10
+BASE = SearchConfig(k=K, queue_len=64, m_max=6, num_walkers=4,
+                    max_steps=256, local_steps=4, sync_ratio=0.8)
+
+
+def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
+          q: int = 16) -> Dict:
+    """One row per (searcher, backend); writes the JSON trajectory file."""
+    ds = dataset(n=n, q=q)
+    g = nsg_index(ds, degree=16)
+    queries = jnp.asarray(ds.queries)
+
+    rows = []
+    ref_ids: Dict[str, np.ndarray] = {}
+    # ref first: it is the parity baseline for the other rows
+    backends = ("ref",) + tuple(
+        b for b in available_backends() if b != "ref")
+    for searcher, run in (("topm", search_topm_batch),
+                          ("speedann", search_speedann_batch)):
+        for backend in backends:
+            cfg = BASE.with_(dist_backend=backend)
+            fn = jax.jit(lambda qq, run=run, cfg=cfg: run(g, qq, cfg))
+            ids, _, stats = fn(queries)
+            us = time_batched(fn, queries)
+            ids = np.asarray(ids)
+            if backend == "ref":
+                ref_ids[searcher] = ids
+            row = {
+                "searcher": searcher,
+                "backend": backend,
+                "interpret": bool(kops.INTERPRET),
+                "us_per_query": us / q,
+                "recall_at_k": recall_at_k(ids, ds.gt_ids, K),
+                "dist_comps": float(np.mean(np.asarray(stats.dist_comps))),
+                "ids_match_ref": bool(
+                    np.array_equal(ids, ref_ids[searcher])),
+            }
+            rows.append(row)
+            print(f"bench_backend_{searcher}_{backend},"
+                  f"{row['us_per_query']:.1f},"
+                  f"recall={row['recall_at_k']:.3f};"
+                  f"ids_match_ref={row['ids_match_ref']}")
+
+    payload = {
+        "bench": "dist_backend",
+        "config": {"n": n, "q": q, "k": K, "m_max": BASE.m_max,
+                   "queue_len": BASE.queue_len, "dma_group": BASE.dma_group},
+        "platform": platform.machine(),
+        "jax": jax.__version__,
+        "unix_time": time.time(),
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path} ({len(rows)} rows)")
+    return payload
+
+
+if __name__ == "__main__":
+    sweep()

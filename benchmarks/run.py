@@ -19,7 +19,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark names")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--sweep-backends", action="store_true",
+                    help="sweep SearchConfig.dist_backend and write "
+                         "BENCH_dist_backend.json (skips the figure suite)")
+    ap.add_argument("--bench-out", default="BENCH_dist_backend.json",
+                    help="output path for --sweep-backends")
     args = ap.parse_args()
+
+    if args.sweep_backends:
+        from benchmarks import dist_backend
+        dist_backend.sweep(args.bench_out)
+        return
 
     from benchmarks import paper_figs
     from benchmarks import roofline_report

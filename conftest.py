@@ -1,0 +1,10 @@
+"""Root pytest conftest.
+
+Makes ``import repro`` work without an editable install — the package lives
+under ``src/`` (pyproject's ``pythonpath = ["src"]`` covers pytest >= 7;
+this covers direct imports from helper scripts run under pytest too).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

@@ -1,73 +1,84 @@
 """END-TO-END DRIVER: batched ANN serving (the paper's kind is search
 serving, so this is the production-shaped example).
 
-Builds an index, then serves batched query traffic through the full
-Speed-ANN stack — staged parallel expansion, adaptive synchronization,
-bounded per-query budgets (straggler mitigation) — and reports
-recall / mean / tail latency per batch, like an online vector-search node.
+Builds an index, then serves *variable-size* batched query traffic through
+``repro.serve.AnnEngine``: batches are quantized to a fixed bucket ladder so
+the jit cache stays bounded and warm while traffic sizes fluctuate, and the
+full Speed-ANN stack (staged parallel expansion, adaptive synchronization,
+bounded budgets) runs underneath with the distance backend picked by
+``--dist-backend``.
 
-    PYTHONPATH=src python examples/serve_ann.py [--batches 20] [--batch 32]
+    PYTHONPATH=src python examples/serve_ann.py [--batches 20] \
+        [--max-batch 32] [--dist-backend ref|rowgather|dma]
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import SearchConfig
-from repro.core import build_nsg, recall_at_k, search_speedann_batch
+from repro.core import build_nsg
 from repro.core.build import exact_knn
 from repro.data import make_vector_dataset
+from repro.serve import AnnEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batches", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=32)
+    def positive_int(v):
+        n = int(v)
+        if n < 1:
+            raise argparse.ArgumentTypeError("must be >= 1")
+        return n
+
+    ap.add_argument("--batches", type=positive_int, default=10)
+    ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--recall-target", type=float, default=0.9)
+    ap.add_argument("--dist-backend", default="ref",
+                    choices=("ref", "rowgather", "dma"))
     args = ap.parse_args()
 
     print("== Speed-ANN serving driver ==")
-    ds = make_vector_dataset("deep", n=args.n, n_queries=args.batch, k=10,
-                             dim=48)
+    ds = make_vector_dataset("deep", n=args.n, n_queries=args.max_batch,
+                             k=10, dim=48)
     graph = build_nsg(ds.base, degree=32, knn_k=32, ef_construction=96)
     cfg = SearchConfig(k=10, queue_len=128, m_max=8, num_walkers=8,
-                       max_steps=512, local_steps=8, sync_ratio=0.8)
+                       max_steps=512, local_steps=8, sync_ratio=0.8,
+                       dist_backend=args.dist_backend)
 
-    search = jax.jit(
-        lambda q: search_speedann_batch(graph, q, cfg))
-    # warmup / compile
-    jax.block_until_ready(search(jnp.asarray(ds.queries))[0])
+    buckets = tuple(b for b in (1, 2, 4, 8, 16, 32, 64, 128)
+                    if b <= args.max_batch)
+    engine = AnnEngine(graph, cfg, bucket_sizes=buckets)
+    compile_s = engine.warmup(ds.base.shape[1])
+    print(f"warmed {len(compile_s)} buckets "
+          f"({', '.join(f'{b}:{s:.1f}s' for b, s in compile_s.items())})")
 
     rng = np.random.RandomState(0)
-    lat, recalls = [], []
     for i in range(args.batches):
         # fresh query traffic each batch, drawn from the corpus's own
-        # generative process (cluster center + unit noise)
-        c_ids = rng.randint(0, ds.centers.shape[0], size=args.batch)
+        # generative process (cluster center + unit noise) — with the
+        # batch size itself fluctuating like online traffic
+        bsz = int(rng.randint(1, args.max_batch + 1))
+        c_ids = rng.randint(0, ds.centers.shape[0], size=bsz)
         queries = (ds.centers[c_ids]
-                   + rng.normal(size=(args.batch, ds.base.shape[1]))
+                   + rng.normal(size=(bsz, ds.base.shape[1]))
                    .astype(np.float32))
         gt_ids, _ = exact_knn(ds.base, queries, 10)
-        t0 = time.perf_counter()
-        ids, dists, stats = search(jnp.asarray(queries))
-        jax.block_until_ready(ids)
-        ms = (time.perf_counter() - t0) * 1e3
-        r = recall_at_k(np.asarray(ids), gt_ids, 10)
-        lat.append(ms)
-        recalls.append(r)
-        print(f"batch {i:02d}: {ms:7.1f} ms ({ms / args.batch:6.2f} "
-              f"ms/query) recall@10={r:.3f} "
-              f"steps={stats.summary()['steps']:.1f}")
+        res = engine.search(queries, gt_ids=gt_ids)
+        print(f"batch {i:02d}: B={bsz:3d} -> bucket {res.buckets} "
+              f"{res.latency_ms:7.1f} ms ({res.latency_ms / bsz:6.2f} "
+              f"ms/query)")
 
-    lat = np.asarray(lat)
-    print(f"\nserved {args.batches * args.batch} queries | "
-          f"recall@10={np.mean(recalls):.3f} | "
-          f"mean={lat.mean():.1f}ms p90={np.percentile(lat, 90):.1f}ms "
-          f"p99={np.percentile(lat, 99):.1f}ms per batch of {args.batch}")
-    assert np.mean(recalls) >= args.recall_target, "recall target missed"
+    m = engine.metrics()
+    print(f"\nserved {m['queries_served']:.0f} queries in "
+          f"{m['requests_served']:.0f} requests | "
+          f"recall@10={m['recall_at_k']:.3f} | "
+          f"mean={m['latency_mean_ms']:.1f}ms "
+          f"p90={m['latency_p90_ms']:.1f}ms p99={m['latency_p99_ms']:.1f}ms"
+          f" | jit entries={m['jit_cache_size']:.0f} "
+          f"(hits={m['cache_hits']:.0f} misses={m['cache_misses']:.0f}) "
+          f"padded={m['padded_queries']:.0f}")
+    assert m["recall_at_k"] >= args.recall_target, "recall target missed"
     print("OK")
 
 

@@ -23,11 +23,13 @@ import jax
 import numpy as np
 
 
+from repro.sharding import keystr_simple
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = jax.tree_util.keystr(path, simple=True, separator="/")
-        flat[key] = leaf
+        flat[keystr_simple(path)] = leaf
     return flat
 
 
@@ -78,7 +80,7 @@ def load_checkpoint(directory: str, step: int, like,
         restored_flat[k] = arr
     # rebuild the tree in ``like``'s structure
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
-    keys = [jax.tree_util.keystr(p, simple=True, separator="/")
+    keys = [keystr_simple(p)
             for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
     new_leaves = [restored_flat[k] for k in keys]
     tree = jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -202,7 +202,13 @@ class SearchConfig:
     num_walkers: int = 1         # W: private-queue workers (vmapped or devices)
     visited_mode: str = "bitmap"  # "bitmap" | "loose" | "hash"
     hash_bits: int = 14          # hash-set capacity = 2**hash_bits
-    use_pallas: bool = False     # fused gather+distance kernel (interpret on CPU)
+    # distance backend for the neighbor-expansion hot path; resolved through
+    # repro.kernels.registry:  "ref" (pure-jnp gather), "rowgather"
+    # (scalar-prefetch Pallas row gather), "dma" (explicit-DMA tile gather +
+    # MXU reduction).  Pallas backends run in interpret mode on CPU and lower
+    # through Mosaic on TPU (see kernels/ops.INTERPRET).
+    dist_backend: str = "ref"
+    dma_group: int = 8           # G: rows per DMA tile ("dma" backend only)
     # distributed search: static outer (scatter/merge) round budget — bounded
     # rounds give deterministic worst-case latency (straggler mitigation)
     global_rounds: int = 12

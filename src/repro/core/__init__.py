@@ -3,7 +3,8 @@ from repro.core.graph import (PaddedCSR, make_padded_csr, group_by_indegree,  # 
                               compute_medoid)
 from repro.core.build import build_nsg, build_hnsw, exact_knn, knn_graph  # noqa: F401
 from repro.core.bfis import (bfis_search_batch, search_topm,  # noqa: F401
-                             search_topm_batch, hnsw_search_batch, dist_l2)
+                             search_topm_batch, hnsw_search_batch, dist_l2,
+                             resolve_dist_fn)
 from repro.core.speedann import (search_speedann, search_speedann_batch,  # noqa: F401
                                  variant)
 from repro.core.metrics import recall_at_k, SearchStats  # noqa: F401

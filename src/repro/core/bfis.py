@@ -33,6 +33,17 @@ from repro.core.metrics import SearchStats
 DistFn = Callable[[PaddedCSR, jax.Array, jax.Array, jax.Array], jax.Array]
 
 
+def resolve_dist_fn(cfg: SearchConfig,
+                    dist_fn: Optional[DistFn] = None) -> DistFn:
+    """An explicit ``dist_fn`` wins; otherwise ``cfg.dist_backend`` resolves
+    through the kernel registry (``"ref" | "rowgather" | "dma"``)."""
+    if dist_fn is not None:
+        return dist_fn
+    # import here so ref-only users never touch the Pallas import path
+    from repro.kernels.registry import resolve_backend
+    return resolve_backend(cfg)
+
+
 def dist_l2(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
             q: jax.Array) -> jax.Array:
     """Reference squared-L2 distance via the two-level vector fetch."""
@@ -103,13 +114,14 @@ def search_topm(
     q: jax.Array,
     cfg: SearchConfig,
     start: Optional[jax.Array] = None,
-    dist_fn: DistFn = dist_l2,
+    dist_fn: Optional[DistFn] = None,
 ) -> Tuple[jax.Array, jax.Array, SearchStats]:
     """Single-queue top-M parallel-neighbor-expansion search (one query).
 
     ``cfg.m_max == 1`` reproduces BFiS / Algorithm 1 exactly.
     Returns (ids (k,), dists (k,), stats).
     """
+    dist_fn = resolve_dist_fn(cfg, dist_fn)
     st = _init_state(graph, q, cfg, start, dist_fn)
 
     def cond(s: _TopMState):
@@ -139,10 +151,11 @@ def search_topm_batch(
     queries: jax.Array,
     cfg: SearchConfig,
     start: Optional[jax.Array] = None,
-    dist_fn: DistFn = dist_l2,
+    dist_fn: Optional[DistFn] = None,
 ):
     """vmapped ``search_topm`` over a (B, d) query batch."""
-    fn = functools.partial(search_topm, graph, cfg=cfg, dist_fn=dist_fn)
+    fn = functools.partial(search_topm, graph, cfg=cfg,
+                           dist_fn=resolve_dist_fn(cfg, dist_fn))
     if start is None:
         return jax.vmap(lambda qq: fn(qq))(queries)
     return jax.vmap(lambda qq, ss: fn(qq, start=ss))(queries, start)

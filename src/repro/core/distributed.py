@@ -37,7 +37,7 @@ from jax import shard_map
 from repro.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
-from repro.core.bfis import DistFn, dist_l2, expand, staged_m
+from repro.core.bfis import DistFn, expand, resolve_dist_fn, staged_m
 from repro.core.graph import PaddedCSR, make_padded_csr
 from repro.core.metrics import SearchStats
 from repro.core.speedann import check_metrics
@@ -100,13 +100,14 @@ def walker_sharded_search(
     mesh: Mesh,
     data_axis: str = "data",
     walker_axis: str = "model",
-    dist_fn: DistFn = dist_l2,
+    dist_fn: Optional[DistFn] = None,
 ) -> Tuple[jax.Array, jax.Array, SearchStats]:
     """Speed-ANN with one walker per device along ``walker_axis``.
 
     queries: (B, d) global batch, B divisible by mesh.shape[data_axis].
     Returns (ids (B,k), dists (B,k), stats batched over B).
     """
+    dist_fn = resolve_dist_fn(cfg, dist_fn)
     n_walkers = int(mesh.shape[walker_axis])
     n_top, n_nodes = graph.n_top, graph.n_nodes
 
@@ -258,7 +259,7 @@ def corpus_sharded_search(
     mesh: Mesh,
     data_axis: str = "data",
     shard_axis: str = "model",
-    dist_fn: DistFn = dist_l2,
+    dist_fn: Optional[DistFn] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Each ``shard_axis`` device searches its partition; global top-K merge.
 
@@ -266,6 +267,7 @@ def corpus_sharded_search(
     """
     from repro.core.bfis import search_topm
 
+    dist_fn = resolve_dist_fn(cfg, dist_fn)
     n_top = 0
 
     def shard_body(nbrs, vectors, medoid, offset, q_local):

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from repro.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
-from repro.core.bfis import DistFn, dist_l2, expand, staged_m
+from repro.core.bfis import DistFn, expand, resolve_dist_fn, staged_m
 from repro.core.metrics import SearchStats
 
 
@@ -105,9 +105,10 @@ def search_speedann(
     q: jax.Array,
     cfg: SearchConfig,
     start: Optional[jax.Array] = None,
-    dist_fn: DistFn = dist_l2,
+    dist_fn: Optional[DistFn] = None,
 ) -> Tuple[jax.Array, jax.Array, SearchStats]:
     """Full Speed-ANN search for one query (Algorithm 3)."""
+    dist_fn = resolve_dist_fn(cfg, dist_fn)
     w, cap = cfg.num_walkers, cfg.queue_len
 
     frontier = fq.make_frontier(cap)
@@ -171,10 +172,11 @@ def search_speedann_batch(
     queries: jax.Array,
     cfg: SearchConfig,
     start: Optional[jax.Array] = None,
-    dist_fn: DistFn = dist_l2,
+    dist_fn: Optional[DistFn] = None,
 ):
     """vmapped Speed-ANN over a (B, d) query batch."""
-    fn = functools.partial(search_speedann, graph, cfg=cfg, dist_fn=dist_fn)
+    fn = functools.partial(search_speedann, graph, cfg=cfg,
+                           dist_fn=resolve_dist_fn(cfg, dist_fn))
     if start is None:
         return jax.vmap(lambda qq: fn(qq))(queries)
     return jax.vmap(lambda qq, ss: fn(qq, start=ss))(queries, start)

@@ -1,5 +1,9 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
-#   l2dist  — fused gather + squared-L2 distance (neighbor expansion)
-#   bitonic — VMEM bitonic co-sort (frontier merge / queue maintenance)
-# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles.
-from repro.kernels.ops import l2dist, make_dist_fn, sort_pairs, topl_merge  # noqa: F401
+#   l2dist   — fused gather + squared-L2 distance (neighbor expansion)
+#   bitonic  — VMEM bitonic co-sort (frontier merge / queue maintenance)
+# ops.py holds the jit'd wrappers; ref.py the pure-jnp oracles; registry.py
+# the pluggable SearchConfig.dist_backend -> DistFn resolution seam.
+from repro.kernels.ops import l2dist, sort_pairs, topl_merge  # noqa: F401
+from repro.kernels.registry import (available_backends, make_dist_fn,  # noqa: F401
+                                    pad_ids_to_tile, register_backend,
+                                    resolve_backend)

@@ -19,36 +19,24 @@ from repro.kernels import ref as _ref
 INTERPRET = True   # flip on real TPU
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+@functools.partial(jax.jit, static_argnames=("impl", "interpret", "g"))
 def l2dist(
     table: jax.Array, ids: jax.Array, queries: jax.Array,
-    impl: str = "rowgather", interpret: bool | None = None,
+    impl: str = "rowgather", interpret: bool | None = None, g: int = 8,
 ) -> jax.Array:
-    """Fused gather + squared-L2: (N,d), (B,C), (B,d) -> (B,C) f32."""
+    """Fused gather + squared-L2: (N,d), (B,C), (B,d) -> (B,C) f32.
+
+    ``g`` is the DMA tile size ("dma" impl only; requires C % g == 0 —
+    ``registry.pad_ids_to_tile`` handles ragged candidate counts).
+    """
     itp = INTERPRET if interpret is None else interpret
     if impl == "ref":
         return _ref.l2dist_ref(table, ids, queries)
     if impl == "rowgather":
         return _l2.l2dist_rowgather(table, ids, queries, interpret=itp)
     if impl == "dma":
-        return _l2.l2dist_dma(table, ids, queries, interpret=itp)
+        return _l2.l2dist_dma(table, ids, queries, g=g, interpret=itp)
     raise ValueError(impl)
-
-
-def make_dist_fn(impl: str = "rowgather", interpret: bool | None = None):
-    """Adapter producing a ``core.bfis.DistFn`` that routes the expansion's
-    distance computations through the Pallas kernel.
-
-    Note: the kernel reads the flat embedding table; the two-level flattened
-    layout is exploited by the pipeline's row streaming itself (hot rows stay
-    in VMEM across adjacent grid steps), so no separate path is needed.
-    """
-    def dist_fn(graph, active_ids, nbr_ids, q):
-        m, r = nbr_ids.shape
-        d = l2dist(graph.vectors, nbr_ids.reshape(1, m * r), q[None, :],
-                   impl=impl, interpret=interpret)
-        return d.reshape(m, r)
-    return dist_fn
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,0 +1,112 @@
+"""Pluggable distance-backend registry for the search hot path.
+
+The neighbor expansion (Challenges II & IV) is the paper's compute hot spot;
+this module is the seam between the search algorithms (``core.bfis``,
+``core.speedann``, ``core.distributed``) and the distance implementations
+(``kernels.l2dist``).  Search code never names a kernel: it carries a
+``SearchConfig.dist_backend`` string that is resolved here to a
+``DistFn(graph, active_ids (M,), nbr_ids (M,R), q (d,)) -> (M,R)``.
+
+Built-in backends:
+
+* ``ref``       — pure-jnp two-level gather (``core.bfis.dist_l2``); exploits
+  the flattened neighbor layout for hot vertices.
+* ``rowgather`` — scalar-prefetch Pallas kernel: candidate ids drive the
+  BlockSpec index_map so the pipeline streams exactly the needed rows.
+* ``dma``       — explicit-DMA tile gather + MXU reduction; candidate counts
+  are padded to the ``cfg.dma_group`` tile (padding ids map to +inf and are
+  sliced off, so ragged M·R shapes are transparent to callers).
+
+New kernels register with :func:`register_backend` and become selectable via
+``SearchConfig(dist_backend=...)`` without touching any search algorithm.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+# factory(cfg: SearchConfig) -> DistFn (see core.bfis.DistFn)
+DistFactory = Callable[..., Callable]
+
+_REGISTRY: Dict[str, DistFactory] = {}
+
+
+def register_backend(name: str):
+    """Decorator: register ``factory(cfg) -> DistFn`` under ``name``."""
+    def deco(factory: DistFactory) -> DistFactory:
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(cfg) -> Callable:
+    """``SearchConfig.dist_backend`` -> DistFn (raises on unknown names)."""
+    name = getattr(cfg, "dist_backend", "ref") or "ref"
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown dist_backend {name!r}; available: "
+            f"{available_backends()}") from None
+    return factory(cfg)
+
+
+def pad_ids_to_tile(ids: jax.Array, tile: int, n_nodes: int) -> jax.Array:
+    """Pad a flat (C,) id vector to a multiple of ``tile`` with the sentinel
+    ``n_nodes`` (>= N ids produce +inf distances in every kernel)."""
+    c = ids.shape[0]
+    pad = (-c) % tile
+    if pad == 0:
+        return ids
+    return jnp.concatenate(
+        [ids, jnp.full((pad,), n_nodes, ids.dtype)])
+
+
+def make_dist_fn(impl: str = "rowgather", *, dma_group: int = 8,
+                 interpret: bool | None = None) -> Callable:
+    """Adapter producing a ``core.bfis.DistFn`` that routes the expansion's
+    per-query (M, R) distance computations through the batched (B, C)
+    kernels (B=1, C=M·R; C padded to the DMA tile for ``impl="dma"``).
+
+    Note: the kernel reads the flat embedding table; the two-level flattened
+    layout is exploited by the pipeline's row streaming itself (hot rows stay
+    in VMEM across adjacent grid steps), so no separate path is needed.
+    """
+    if impl == "ref":
+        from repro.core.bfis import dist_l2
+        return dist_l2
+
+    def dist_fn(graph, active_ids, nbr_ids, q):
+        m, r = nbr_ids.shape
+        flat = nbr_ids.reshape(m * r)
+        if impl == "dma":
+            flat = pad_ids_to_tile(flat, dma_group, graph.n_nodes)
+        d = ops.l2dist(graph.vectors, flat[None, :], q[None, :],
+                       impl=impl, interpret=interpret, g=dma_group)
+        return d[0, :m * r].reshape(m, r)
+    return dist_fn
+
+
+@register_backend("ref")
+def _ref_backend(cfg):
+    # lazy import: core.bfis imports this module for resolution
+    from repro.core.bfis import dist_l2
+    return dist_l2
+
+
+@register_backend("rowgather")
+def _rowgather_backend(cfg):
+    return make_dist_fn("rowgather")
+
+
+@register_backend("dma")
+def _dma_backend(cfg):
+    return make_dist_fn("dma", dma_group=int(getattr(cfg, "dma_group", 8)))

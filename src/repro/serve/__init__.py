@@ -1,2 +1,3 @@
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.ann_engine import AnnEngine, ServeResult  # noqa: F401
 from repro.serve.knnlm import KNNLMDatastore, knnlm_logits  # noqa: F401

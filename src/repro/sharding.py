@@ -207,12 +207,28 @@ def spec_for_path(path: str, shape: Tuple[int, ...],
     return resolve_spec(shape, (None,) * len(shape), mesh, rules)
 
 
+def keystr_simple(path) -> str:
+    """"simple" /-separated tree-path key, stable across jax versions
+    (``jax.tree_util.keystr`` only grew simple=/separator= kwargs in newer
+    releases)."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):          # DictKey / FlattenedIndexKey
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):       # GetAttrKey
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):        # SequenceKey
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
 def param_specs(params, mesh: Optional[Mesh] = None,
                 rules: Optional[Rules] = None):
     """PartitionSpec pytree for a parameter pytree, by path convention."""
     def one(path, leaf):
-        name = jax.tree_util.keystr(path, simple=True, separator="/")
-        return spec_for_path(name, leaf.shape, mesh, rules)
+        return spec_for_path(keystr_simple(path), leaf.shape, mesh, rules)
     return jax.tree_util.tree_map_with_path(one, params)
 
 

@@ -1,0 +1,116 @@
+"""Batched ANN serving engine: bucketing, jit-cache reuse, parity.
+
+The engine must be *transparent*: a mixed-size query stream produces exactly
+the results of direct (unbatched/unbucketed) search, while the jit cache
+grows with the number of distinct buckets touched — never with the number of
+calls.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SearchConfig
+from repro.core import build_nsg, search_speedann_batch
+from repro.core.speedann import search_speedann
+from repro.data import make_vector_dataset
+from repro.serve import AnnEngine
+
+BUCKETS = (1, 2, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("deep", n=1000, n_queries=16, k=10, dim=24,
+                               n_clusters=8, seed=1)
+
+
+@pytest.fixture(scope="module")
+def graph(ds):
+    return build_nsg(ds.base, degree=12, knn_k=12, ef_construction=24,
+                     passes=1)
+
+
+CFG = SearchConfig(k=10, queue_len=32, m_max=4, num_walkers=4, max_steps=64,
+                   local_steps=4)
+
+
+def test_mixed_stream_matches_unbatched_search(ds, graph):
+    """Bucketed+padded serving returns per-query results identical to the
+    plain searcher for every batch size in a fluctuating stream, including
+    one larger than the top bucket (served in chunks)."""
+    engine = AnnEngine(graph, CFG, bucket_sizes=BUCKETS)
+    stream = (1, 3, 7, 4, 2, 8, 11)
+    for bsz in stream:
+        q = ds.queries[:bsz]
+        res = engine.search(q, gt_ids=ds.gt_ids[:bsz])
+        assert res.ids.shape == (bsz, CFG.k)
+        direct_ids, direct_d, _ = search_speedann_batch(
+            graph, jnp.asarray(q), CFG)
+        np.testing.assert_array_equal(res.ids, np.asarray(direct_ids))
+        np.testing.assert_array_equal(res.dists, np.asarray(direct_d))
+        # stats leaves are sliced back to the true batch size too
+        assert np.asarray(res.stats.steps).shape == (bsz,)
+    m = engine.metrics()
+    assert m["queries_served"] == sum(stream)
+    assert m["requests_served"] == len(stream)
+    assert m["recall_at_k"] >= 0.9
+
+
+def test_single_query_matches_single_search(ds, graph):
+    engine = AnnEngine(graph, CFG, bucket_sizes=BUCKETS)
+    res = engine.search(ds.queries[:1])
+    ids, dists, _ = search_speedann(graph, jnp.asarray(ds.queries[0]), CFG)
+    np.testing.assert_array_equal(res.ids[0], np.asarray(ids))
+
+
+def test_jit_cache_entries_equal_buckets_not_calls(ds, graph):
+    """Many calls, few shapes: cache size == distinct buckets touched."""
+    engine = AnnEngine(graph, CFG, bucket_sizes=BUCKETS)
+    stream = (3, 3, 4, 3, 4, 1, 3, 4, 1, 3)   # 10 calls, buckets {4, 1}
+    for bsz in stream:
+        engine.search(ds.queries[:bsz])
+    assert engine.jit_cache_size == 2
+    assert engine.metrics()["cache_misses"] == 2
+    assert engine.metrics()["cache_hits"] == len(stream) - 2
+    # oversize batch -> top bucket only (one new entry, chunked serving)
+    engine.search(ds.queries[:11])
+    assert engine.jit_cache_size == 3
+
+
+def test_warmup_precompiles_every_bucket(ds, graph):
+    engine = AnnEngine(graph, CFG, bucket_sizes=BUCKETS)
+    compile_s = engine.warmup(ds.base.shape[1])
+    assert set(compile_s) == set(BUCKETS)
+    assert engine.jit_cache_size == len(BUCKETS)
+    # warmup never counts as served traffic
+    m = engine.metrics()
+    assert m["queries_served"] == 0 and m["cache_misses"] == 0
+    engine.search(ds.queries[:5])
+    assert engine.metrics()["cache_misses"] == 0   # all warm
+
+
+def test_bucket_for_quantization(ds, graph):
+    engine = AnnEngine(graph, CFG, bucket_sizes=BUCKETS)
+    assert [engine.bucket_for(b) for b in (1, 2, 3, 4, 5, 8, 9, 100)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8]
+
+
+def test_rejects_bad_arguments(ds, graph):
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        AnnEngine(graph, CFG, algorithm="annoy")
+    engine = AnnEngine(graph, CFG, bucket_sizes=BUCKETS)
+    with pytest.raises(ValueError, match="queries must be"):
+        engine.search(ds.queries[0])
+    with pytest.raises(ValueError, match="queries must be"):
+        engine.search(np.zeros((0, ds.base.shape[1]), np.float32))
+
+
+def test_engine_with_kernel_backend(ds, graph):
+    """The serving layer composes with the distance-backend seam."""
+    cfg = CFG.with_(dist_backend="dma", m_max=3)   # 3*12 % 8 != 0: padded
+    ref = AnnEngine(graph, cfg.with_(dist_backend="ref"),
+                    bucket_sizes=BUCKETS, algorithm="topm")
+    eng = AnnEngine(graph, cfg, bucket_sizes=BUCKETS, algorithm="topm")
+    got = eng.search(ds.queries[:6])
+    want = ref.search(ds.queries[:6])
+    np.testing.assert_array_equal(got.ids, want.ids)

@@ -15,8 +15,13 @@ from repro.sharding import ACT_RULES, DEFAULT_RULES, resolve_spec, \
 
 @pytest.fixture(scope="module")
 def mesh8():
-    # AbstractMesh: axis names/sizes without real devices (1-device CI)
-    return jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    # AbstractMesh: axis names/sizes without real devices (1-device CI).
+    # Signature differs across jax versions: new is (sizes, names), old
+    # (jax<=0.4.x) is a tuple of (name, size) pairs.
+    try:
+        return jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    except TypeError:
+        return jax.sharding.AbstractMesh((("data", 2), ("model", 4)))
 
 
 def test_resolve_spec_drops_nondivisible(mesh8):
