@@ -8,18 +8,16 @@ the paper's 1M–1B runs map onto the dry-run/roofline path instead.
 """
 from __future__ import annotations
 
-import functools
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ann import AnnIndex, IndexSpec, SearchParams
 from repro.config import SearchConfig
-from repro.core import (bfis_search_batch, build_hnsw, build_nsg,
-                        hnsw_search_batch, recall_at_k,
-                        search_speedann_batch, search_topm_batch)
+from repro.core import recall_at_k
 from repro.data import make_vector_dataset
 
 K = 10
@@ -34,18 +32,20 @@ def dataset(name="sift", n=8000, q=64, dim=32, seed=0):
     return _CACHE[key]
 
 
-def nsg_index(ds, degree=24):
-    key = ("nsg", id(ds), degree)
+def nsg_index(ds, degree=24, metric="l2") -> AnnIndex:
+    key = ("nsg", id(ds), degree, metric)
     if key not in _CACHE:
-        _CACHE[key] = build_nsg(ds.base, degree=degree, knn_k=degree,
-                                ef_construction=2 * degree, passes=2)
+        _CACHE[key] = AnnIndex.build(ds, IndexSpec(
+            builder="nsg", metric=metric, degree=degree, knn_k=degree,
+            ef_construction=2 * degree, passes=2))
     return _CACHE[key]
 
 
-def hnsw_index(ds, degree=24):
-    key = ("hnsw", id(ds), degree)
+def hnsw_index(ds, degree=24, metric="l2") -> AnnIndex:
+    key = ("hnsw", id(ds), degree, metric)
     if key not in _CACHE:
-        _CACHE[key] = build_hnsw(ds.base, degree=degree)
+        _CACHE[key] = AnnIndex.build(ds, IndexSpec(
+            builder="hnsw", metric=metric, degree=degree))
     return _CACHE[key]
 
 
@@ -60,17 +60,27 @@ def time_batched(fn: Callable, *args, iters=3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run_method(method: str, graph_or_idx, queries, cfg: SearchConfig):
-    """Dispatch by method name -> (ids, dists, stats)."""
-    if method == "bfis":
-        return bfis_search_batch(graph_or_idx, queries, cfg)
-    if method == "hnsw":
-        return hnsw_search_batch(graph_or_idx, queries, cfg)
-    if method == "topm":
-        return search_topm_batch(graph_or_idx, queries, cfg)
-    if method == "speedann":
-        return search_speedann_batch(graph_or_idx, queries, cfg)
-    raise ValueError(method)
+# method name -> facade algorithm ("hnsw" = bfis on an hnsw-built index,
+# which routes through the greedy upper-level descent)
+_METHOD_ALGO = {"bfis": "bfis", "hnsw": "bfis", "topm": "topm",
+                "speedann": "speedann", "sharded": "sharded"}
+
+
+def run_method(method: str, index: AnnIndex, queries, cfg):
+    """Dispatch by method name through the AnnIndex facade.
+
+    ``cfg`` may be a ``SearchParams`` or a legacy ``SearchConfig`` (lifted
+    onto params; the paper-figure sweeps mutate SearchConfig knobs).
+    Returns (ids, dists, stats)."""
+    try:
+        algo = _METHOD_ALGO[method]
+    except KeyError:
+        raise ValueError(method) from None
+    if isinstance(cfg, SearchConfig):
+        params = SearchParams.from_search_config(cfg, algorithm=algo)
+    else:
+        params = cfg.with_(algorithm=algo)
+    return index.search(queries, params)
 
 
 def latency_at_recall(

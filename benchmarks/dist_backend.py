@@ -2,17 +2,20 @@
 
 ``PYTHONPATH=src python -m benchmarks.run --sweep-backends``
 
-Runs the same top-M search (and the full Speed-ANN searcher) with every
-registered distance backend and records per-backend wall time, recall, and
-parity against the ``ref`` backend into ``BENCH_dist_backend.json`` — the
-trajectory file future kernel PRs append to.  On this CPU container the
-Pallas backends run in interpret mode, so absolute times measure the
-emulation, not Mosaic; the JSON keeps ``interpret`` alongside each row so
-TPU runs are distinguishable in the trajectory.
+Runs the same top-M search (and the full Speed-ANN searcher) through the
+``AnnIndex`` facade with every registered distance backend and records
+per-backend wall time, recall, and parity against the ``ref`` backend into
+``BENCH_dist_backend.json``.  The file is a TRAJECTORY: each sweep APPENDS
+its rows, replacing only rows with the same (searcher, backend, host,
+interpret) key — so this container's interpret-mode numbers and future
+Mosaic/TPU numbers from other hosts accumulate side by side instead of
+overwriting each other.  On this CPU container the Pallas backends run in
+interpret mode, so absolute times measure the emulation, not Mosaic.
 """
 from __future__ import annotations
 
 import json
+import os
 import platform
 import time
 from typing import Dict
@@ -22,34 +25,67 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import dataset, nsg_index, time_batched
-from repro.config import SearchConfig
-from repro.core import (recall_at_k, search_speedann_batch,
-                        search_topm_batch)
+from repro.ann import SearchParams
+from repro.core import recall_at_k
 from repro.kernels import available_backends
 from repro.kernels import ops as kops
 
 K = 10
-BASE = SearchConfig(k=K, queue_len=64, m_max=6, num_walkers=4,
+BASE = SearchParams(k=K, queue_len=64, m_max=6, num_walkers=4,
                     max_steps=256, local_steps=4, sync_ratio=0.8)
+
+
+def _row_key(row: Dict) -> tuple:
+    """Identity of a trajectory row: same key ⇒ newer run supersedes."""
+    return (row.get("searcher"), row.get("backend"),
+            row.get("host", "<unknown>"), row.get("interpret"))
+
+
+def _merge_rows(out_path: str, new_rows: list) -> list:
+    """Existing rows (any prior format) + new rows, deduped by key.
+
+    Legacy rows written before the ``host`` field existed cannot name their
+    machine; they are superseded by any new row with the same (searcher,
+    backend, interpret) — otherwise a re-run on the very machine that wrote
+    them would double-count it in the trajectory forever."""
+    existing = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                existing = json.load(f).get("rows", [])
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    fresh = {_row_key(r) for r in new_rows}
+    fresh_hostless = {(r.get("searcher"), r.get("backend"),
+                       r.get("interpret")) for r in new_rows}
+
+    def superseded(r):
+        if _row_key(r) in fresh:
+            return True
+        return "host" not in r and (
+            (r.get("searcher"), r.get("backend"),
+             r.get("interpret")) in fresh_hostless)
+
+    return [r for r in existing if not superseded(r)] + new_rows
 
 
 def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
           q: int = 16) -> Dict:
-    """One row per (searcher, backend); writes the JSON trajectory file."""
+    """One row per (searcher, backend); appends to the JSON trajectory."""
     ds = dataset(n=n, q=q)
-    g = nsg_index(ds, degree=16)
+    idx = nsg_index(ds, degree=16)
     queries = jnp.asarray(ds.queries)
+    host = platform.node() or platform.machine()
 
     rows = []
     ref_ids: Dict[str, np.ndarray] = {}
     # ref first: it is the parity baseline for the other rows
     backends = ("ref",) + tuple(
         b for b in available_backends() if b != "ref")
-    for searcher, run in (("topm", search_topm_batch),
-                          ("speedann", search_speedann_batch)):
+    for searcher in ("topm", "speedann"):
         for backend in backends:
-            cfg = BASE.with_(dist_backend=backend)
-            fn = jax.jit(lambda qq, run=run, cfg=cfg: run(g, qq, cfg))
+            fn = idx.searcher(BASE.with_(algorithm=searcher,
+                                         backend=backend))
             ids, _, stats = fn(queries)
             us = time_batched(fn, queries)
             ids = np.asarray(ids)
@@ -58,7 +94,14 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
             row = {
                 "searcher": searcher,
                 "backend": backend,
+                "host": host,
                 "interpret": bool(kops.INTERPRET),
+                # dataset scale rides on every row: rows from sweeps with
+                # different configs coexist in the trajectory, so the
+                # top-level "config" (latest run) must not be trusted per row
+                "n": n,
+                "q": q,
+                "unix_time": time.time(),
                 "us_per_query": us / q,
                 "recall_at_k": recall_at_k(ids, ds.gt_ids, K),
                 "dist_comps": float(np.mean(np.asarray(stats.dist_comps))),
@@ -71,6 +114,7 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
                   f"recall={row['recall_at_k']:.3f};"
                   f"ids_match_ref={row['ids_match_ref']}")
 
+    all_rows = _merge_rows(out_path, rows)
     payload = {
         "bench": "dist_backend",
         "config": {"n": n, "q": q, "k": K, "m_max": BASE.m_max,
@@ -78,11 +122,12 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
         "platform": platform.machine(),
         "jax": jax.__version__,
         "unix_time": time.time(),
-        "rows": rows,
+        "rows": all_rows,
     }
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"# wrote {out_path} ({len(rows)} rows)")
+    print(f"# wrote {out_path} ({len(rows)} new rows, "
+          f"{len(all_rows)} total in trajectory)")
     return payload
 
 

@@ -18,19 +18,16 @@ dict for the harness.  Naming follows the paper:
 """
 from __future__ import annotations
 
-import time
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import (K, dataset, hnsw_index, latency_at_recall,
-                               modeled_parallel_us, nsg_index, run_method,
-                               time_batched)
+                               modeled_parallel_us, nsg_index, run_method)
 from repro.config import SearchConfig
 from repro.core import recall_at_k, search_speedann_batch, variant
-from repro.core.graph import group_by_indegree, top_level_hit_fraction
+from repro.core.graph import group_by_indegree
 
 BASE = SearchConfig(k=K, queue_len=64, m_max=8, num_walkers=8,
                     max_steps=512, local_steps=8, sync_ratio=0.8)
@@ -211,10 +208,11 @@ def fig16_ablation() -> Dict:
 
 def fig17_neighbor_grouping() -> Dict:
     ds = dataset()
-    g = nsg_index(ds)
+    base = nsg_index(ds).graph      # the facade's underlying PaddedCSR
     # degree-centric regrouping with 1% top level (paper: 0.1% at 100M)
-    g2, _perm = group_by_indegree(np.asarray(g.nbrs), np.asarray(g.vectors),
-                                  medoid=int(g.medoid), top_fraction=0.01)
+    g2, _perm = group_by_indegree(np.asarray(base.nbrs),
+                                  np.asarray(base.vectors),
+                                  medoid=int(base.medoid), top_fraction=0.01)
     q = jnp.asarray(ds.queries)
 
     # search returns REGROUPED ids; map back through the permutation

@@ -11,7 +11,7 @@ import json
 import os
 from typing import Dict
 
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.roofline import HBM_BW
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..",
                        "dryrun_results.json")

@@ -5,11 +5,11 @@ Speed-ANN index over it, then decodes with retrieval-interpolated logits.
 
     PYTHONPATH=src python examples/knnlm_decode.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import SearchConfig, TrainConfig
+from repro.ann import SearchParams
+from repro.config import TrainConfig
 from repro.configs import get_smoke_config
 from repro.data.tokens import TokenStream, _batch_at
 from repro.models import build_model
@@ -33,18 +33,21 @@ def main():
 
     corpus = [jnp.asarray(_batch_at(stream, s)["tokens"])
               for s in range(6)]
+    # inner-product retrieval over hidden states — the metric that matches
+    # the LM head's own dot-product similarity (a one-flag choice now)
     ds = build_datastore(model, state.params, corpus, cfg.vocab_size,
-                         degree=12)
-    print(f"datastore: {ds.graph.n_nodes} (hidden, next-token) pairs")
+                         degree=12, metric="ip")
+    print(f"datastore: {ds.graph.n_nodes} (hidden, next-token) pairs "
+          f"(metric={ds.index.metric})")
 
     # decode a prompt with and without retrieval
     prompt = jnp.asarray(_batch_at(stream, 99)["tokens"][:4, :16])
     hidden = _final_hidden(model, state.params, prompt)[:, -1]
     logits, _ = model.forward(state.params, prompt, remat=False)
     lm_last = logits[:, -1]
-    scfg = SearchConfig(k=8, queue_len=32, m_max=4, num_walkers=4,
-                        max_steps=64, local_steps=4)
-    mixed, retrieved = knnlm_logits(ds, hidden, lm_last, scfg, lam=0.3)
+    sparams = SearchParams(k=8, queue_len=32, m_max=4, num_walkers=4,
+                           max_steps=64, local_steps=4)
+    mixed, retrieved = knnlm_logits(ds, hidden, lm_last, sparams, lam=0.3)
     lm_tok = np.asarray(jnp.argmax(lm_last, -1))
     mix_tok = np.asarray(jnp.argmax(mixed, -1))
     print(f"LM argmax tokens:      {lm_tok}")

@@ -1,52 +1,76 @@
-"""Quickstart: build a Speed-ANN index and search it three ways.
+"""Quickstart: the AnnIndex lifecycle — build, save/load, search, serve.
+
+One facade covers the whole paper stack: metric-general index construction
+(l2 | ip | cosine), npz persistence, every search algorithm (BFiS, top-M,
+Speed-ANN, sharded walkers), every distance-kernel backend, and batched
+serving.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import SearchConfig
-from repro.core import (bfis_search_batch, build_nsg, recall_at_k,
-                        search_speedann_batch)
+from repro.ann import AnnIndex, IndexSpec, SearchParams
+from repro.core import recall_at_k
 from repro.data import make_vector_dataset
 
 
 def main():
-    print("== Speed-ANN quickstart ==")
+    print("== Speed-ANN quickstart (AnnIndex facade) ==")
     ds = make_vector_dataset("sift", n=5000, n_queries=32, k=10, dim=32)
     print(f"dataset: {ds.base.shape[0]} points, d={ds.base.shape[1]}")
 
+    # -- build: the metric is an index-time property ------------------------
     t0 = time.time()
-    graph = build_nsg(ds.base, degree=24, knn_k=24, ef_construction=48)
-    print(f"NSG-style index built in {time.time() - t0:.1f}s "
-          f"(degree {graph.degree}, medoid {int(graph.medoid)})")
+    index = AnnIndex.build(ds, IndexSpec(builder="nsg", metric="l2",
+                                         degree=24))
+    print(f"built {index} in {time.time() - t0:.1f}s")
 
-    q = jnp.asarray(ds.queries)
-    cfg = SearchConfig(k=10, queue_len=64, m_max=8, num_walkers=8,
-                       max_steps=256, local_steps=8, sync_ratio=0.8)
+    # -- save / load round-trip ---------------------------------------------
+    path = index.save(os.path.join(tempfile.mkdtemp(), "sift_analog.npz"))
+    index = AnnIndex.load(path)
+    print(f"round-tripped through {path}")
 
-    # 1. sequential best-first search (the NSG/HNSW baseline, M=1)
-    ids, _, st = bfis_search_batch(graph, q, cfg)
-    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
-    print(f"BFiS      recall@10={r:.3f} steps={st.summary()['steps']:.1f} "
-          f"comps={st.summary()['dist_comps']:.0f}")
+    # -- search: per-query knobs live in SearchParams -----------------------
+    gt, _ = index.exact(ds.queries, 10)      # metric-aware ground truth
+    for algorithm in ("bfis", "topm", "speedann"):
+        params = SearchParams(k=10, queue_len=64, m_max=8, num_walkers=8,
+                              max_steps=256, local_steps=8,
+                              algorithm=algorithm)
+        ids, _, st = index.search(ds.queries, params)
+        r = recall_at_k(np.asarray(ids), gt, 10)
+        s = st.summary()
+        print(f"{algorithm:9s} recall@10={r:.3f} steps={s['steps']:.1f} "
+              f"comps={s['dist_comps']:.0f}")
 
-    # 2. Speed-ANN: staged parallel neighbor expansion + adaptive sync
-    ids, _, st = search_speedann_batch(graph, q, cfg)
-    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
-    s = st.summary()
-    print(f"Speed-ANN recall@10={r:.3f} steps={s['steps']:.1f} "
-          f"comps={s['dist_comps']:.0f} syncs={s['syncs']:.1f} "
-          f"dup_comps={s['dup_comps']:.0f}")
+    # -- the same search through a Pallas distance kernel -------------------
+    ids, _, _ = index.search(
+        ds.queries, SearchParams(k=10, queue_len=64, m_max=8, num_walkers=8,
+                                 max_steps=256, local_steps=8,
+                                 algorithm="speedann", backend="rowgather"))
+    r = recall_at_k(np.asarray(ids), gt, 10)
+    print(f"speedann (Pallas rowgather kernel, interpret) recall@10={r:.3f}")
 
-    # 3. same search through the Pallas fused gather+distance kernel
-    from repro.kernels import make_dist_fn
-    ids, _, _ = search_speedann_batch(graph, q, cfg,
-                                      dist_fn=make_dist_fn("rowgather"))
-    r = recall_at_k(np.asarray(ids), ds.gt_ids, 10)
-    print(f"Speed-ANN (Pallas dist kernel, interpret) recall@10={r:.3f}")
+    # -- metric choice: cosine retrieval over the same raw vectors ----------
+    cos = AnnIndex.build(ds, IndexSpec(metric="cosine", degree=24))
+    cgt, _ = cos.exact(ds.queries, 10)
+    ids, _, _ = cos.search(ds.queries, SearchParams(algorithm="speedann",
+                                                    m_max=8, num_walkers=8,
+                                                    max_steps=256))
+    r = recall_at_k(np.asarray(ids), cgt, 10)
+    print(f"cosine index recall@10={r:.3f} (queries normalized inside the "
+          f"facade)")
+
+    # -- serve: bucketed batched engine over the index ----------------------
+    engine = index.serve(SearchParams(k=10, m_max=8, num_walkers=8,
+                                      max_steps=256),
+                         bucket_sizes=(1, 4, 16, 32))
+    res = engine.search(ds.queries[:5], gt_ids=gt[:5])
+    print(f"served B=5 -> bucket {res.buckets} in {res.latency_ms:.1f} ms, "
+          f"recall@10={engine.metrics()['recall_at_k']:.3f}")
 
 
 if __name__ == "__main__":

@@ -9,17 +9,15 @@ bounded budgets) runs underneath with the distance backend picked by
 ``--dist-backend``.
 
     PYTHONPATH=src python examples/serve_ann.py [--batches 20] \
-        [--max-batch 32] [--dist-backend ref|rowgather|dma]
+        [--max-batch 32] [--dist-backend ref|rowgather|dma] \
+        [--metric l2|ip|cosine]
 """
 import argparse
 
 import numpy as np
 
-from repro.config import SearchConfig
-from repro.core import build_nsg
-from repro.core.build import exact_knn
+from repro.ann import AnnIndex, IndexSpec, SearchParams
 from repro.data import make_vector_dataset
-from repro.serve import AnnEngine
 
 
 def main():
@@ -36,19 +34,22 @@ def main():
     ap.add_argument("--recall-target", type=float, default=0.9)
     ap.add_argument("--dist-backend", default="ref",
                     choices=("ref", "rowgather", "dma"))
+    ap.add_argument("--metric", default="l2",
+                    choices=("l2", "ip", "cosine"))
     args = ap.parse_args()
 
     print("== Speed-ANN serving driver ==")
     ds = make_vector_dataset("deep", n=args.n, n_queries=args.max_batch,
                              k=10, dim=48)
-    graph = build_nsg(ds.base, degree=32, knn_k=32, ef_construction=96)
-    cfg = SearchConfig(k=10, queue_len=128, m_max=8, num_walkers=8,
-                       max_steps=512, local_steps=8, sync_ratio=0.8,
-                       dist_backend=args.dist_backend)
+    index = AnnIndex.build(ds, IndexSpec(
+        builder="nsg", metric=args.metric, degree=32, ef_construction=96))
+    params = SearchParams(k=10, queue_len=128, m_max=8, num_walkers=8,
+                          max_steps=512, local_steps=8, sync_ratio=0.8,
+                          backend=args.dist_backend)
 
     buckets = tuple(b for b in (1, 2, 4, 8, 16, 32, 64, 128)
                     if b <= args.max_batch)
-    engine = AnnEngine(graph, cfg, bucket_sizes=buckets)
+    engine = index.serve(params, bucket_sizes=buckets)
     compile_s = engine.warmup(ds.base.shape[1])
     print(f"warmed {len(compile_s)} buckets "
           f"({', '.join(f'{b}:{s:.1f}s' for b, s in compile_s.items())})")
@@ -63,7 +64,7 @@ def main():
         queries = (ds.centers[c_ids]
                    + rng.normal(size=(bsz, ds.base.shape[1]))
                    .astype(np.float32))
-        gt_ids, _ = exact_knn(ds.base, queries, 10)
+        gt_ids, _ = index.exact(queries, 10)   # metric-aware ground truth
         res = engine.search(queries, gt_ids=gt_ids)
         print(f"batch {i:02d}: B={bsz:3d} -> bucket {res.buckets} "
               f"{res.latency_ms:7.1f} ms ({res.latency_ms / bsz:6.2f} "

@@ -1,0 +1,7 @@
+# The public vector-search API: one facade over build -> save/load ->
+# search -> serve, metric-general (l2 | ip | cosine) across every search
+# algorithm and distance backend.  See repro.ann.index for the lifecycle.
+from repro.ann.spec import (ALGORITHMS, BUILDERS, METRICS,  # noqa: F401
+                            IndexSpec, SearchParams)
+from repro.ann.index import (AnnIndex, SearchResult,  # noqa: F401
+                             default_search_mesh)

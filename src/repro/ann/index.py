@@ -1,0 +1,337 @@
+"""``AnnIndex`` — the one public API for vector search.
+
+The paper separates the index (CSR topology + vectors, §3.2) from the search
+algorithm (BFiS / top-M / Speed-ANN, Alg. 1–3); this class is that
+separation as an object with a full lifecycle::
+
+    from repro.ann import AnnIndex, IndexSpec, SearchParams
+
+    index = AnnIndex.build(dataset, IndexSpec(metric="cosine", degree=24))
+    index.save("/tmp/idx.npz")
+
+    index = AnnIndex.load("/tmp/idx.npz")
+    res = index.search(queries, SearchParams(algorithm="speedann", m_max=8))
+    engine = index.serve(SearchParams(k=10))        # batched AnnEngine
+
+Every algorithm in {bfis, topm, speedann, sharded} and every registered
+distance backend serves every metric in {l2, ip, cosine}: metric handling
+(query normalization for cosine, negative-inner-product kernels for ip) and
+neighbor-grouping id remapping live HERE, so callers never hand-wire
+``PaddedCSR`` + ``SearchConfig`` + ``resolve_dist_fn`` again.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ann.spec import IndexSpec, SearchParams
+from repro.core.bfis import (bfis_search_batch, hnsw_search_batch,
+                             search_topm_batch)
+from repro.core.build import (HNSWIndex, build_hnsw, build_nsg, exact_knn,
+                              normalize_rows)
+from repro.core.graph import PaddedCSR, group_by_indegree
+from repro.core.speedann import search_speedann_batch
+
+_SAVE_FORMAT = 1
+
+
+class SearchResult(NamedTuple):
+    """One batched search: ids/dists (B, k) + per-query SearchStats."""
+    ids: jax.Array
+    dists: jax.Array
+    stats: object
+
+
+def default_search_mesh():
+    """(data=1, model=n_devices) mesh for the "sharded" algorithm when the
+    caller does not provide one.  On a single-device host this degenerates
+    to one walker — the same code path, no special-casing."""
+    from repro.core.distributed import make_search_mesh
+    return make_search_mesh((1, len(jax.devices())), ("data", "model"))
+
+
+def normalize_queries(q: jax.Array) -> jax.Array:
+    """Unit-normalize a (B, d) query batch (cosine = ip on the unit
+    sphere).  Shared by ``AnnIndex.searcher`` and the serving engine so the
+    two paths cannot drift."""
+    return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+
+
+def remap_result_ids(ids: jax.Array, old_from_new: jax.Array,
+                     n_nodes: int) -> jax.Array:
+    """Map grouped (relabelled) result ids back to the caller's original id
+    space; sentinel/invalid ids (>= n_nodes) pass through unchanged."""
+    safe = jnp.minimum(ids, n_nodes - 1)
+    return jnp.where(ids < n_nodes, old_from_new[safe], ids)
+
+
+class AnnIndex:
+    """A built similarity-graph index + its :class:`IndexSpec`.
+
+    Construct via :meth:`build` or :meth:`load`, never directly (the
+    constructor is public only for internal wiring and tests).
+    """
+
+    def __init__(self, spec: IndexSpec, graph: PaddedCSR,
+                 hnsw: Optional[HNSWIndex] = None,
+                 old_from_new: Optional[np.ndarray] = None):
+        self.spec = spec
+        self.graph = graph
+        self.hnsw = hnsw
+        # neighbor grouping relabels vertices; old_from_new maps result ids
+        # back to the caller's original ids (None when no relabelling)
+        self.old_from_new = (None if old_from_new is None
+                             else np.asarray(old_from_new, np.int64))
+        # device-resident remap table, uploaded once per index (it enters
+        # every searcher's executable as a jit argument, like the graph)
+        self._ofn = (jnp.asarray(self.old_from_new, jnp.int32)
+                     if self.old_from_new is not None
+                     else jnp.zeros((0,), jnp.int32))
+        self._searcher_cache: Dict = {}
+        self._host_vectors: Optional[np.ndarray] = None  # exact() cache
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def n_nodes(self) -> int:
+        return self.graph.n_nodes
+
+    @property
+    def dim(self) -> int:
+        return self.graph.dim
+
+    @property
+    def metric(self) -> str:
+        return self.spec.metric
+
+    def __repr__(self) -> str:
+        return (f"AnnIndex(builder={self.spec.builder!r}, "
+                f"metric={self.spec.metric!r}, n={self.n_nodes}, "
+                f"d={self.dim}, degree={self.graph.degree})")
+
+    # -- build -------------------------------------------------------------
+
+    @classmethod
+    def build(cls, data, spec: IndexSpec = IndexSpec()) -> "AnnIndex":
+        """Build an index over ``data`` ((N, d) array-like, or anything with
+        a ``.base`` attribute such as ``repro.data.VectorDataset``).
+
+        For ``metric="cosine"`` the base vectors are unit-normalized here
+        and stored normalized (cosine == inner product on the unit sphere);
+        queries are normalized symmetrically at search time.
+        """
+        # unwrap dataset-like objects (e.g. repro.data.VectorDataset) — but
+        # never raw arrays: np.ndarray itself exposes a ``.base`` attribute
+        # (its memory owner), which must not be mistaken for a dataset field
+        if not isinstance(data, (np.ndarray, jax.Array)) \
+                and getattr(data, "base", None) is not None:
+            data = data.base
+        data = np.asarray(data, np.float32)
+        if data.ndim != 2:
+            raise ValueError(f"data must be (N, d), got {data.shape}")
+        if spec.metric == "cosine":
+            data = normalize_rows(data)
+        build_metric = "l2" if spec.metric == "cosine" else spec.metric
+
+        if spec.builder == "hnsw":
+            hnsw = build_hnsw(data, degree=spec.degree,
+                              upper_degree=spec.upper_degree,
+                              seed=spec.seed, alpha=spec.alpha,
+                              metric=build_metric)
+            return cls(spec, hnsw.base, hnsw=hnsw)
+
+        graph = build_nsg(data, degree=spec.degree,
+                          knn_k=spec.resolved_knn_k, alpha=spec.alpha,
+                          ef_construction=spec.resolved_ef, seed=spec.seed,
+                          passes=spec.passes, metric=build_metric)
+        old_from_new = None
+        if spec.n_top_fraction > 0:
+            graph, old_from_new = group_by_indegree(
+                np.asarray(graph.nbrs), np.asarray(graph.vectors),
+                medoid=int(graph.medoid),
+                top_fraction=spec.n_top_fraction)
+        return cls(spec, graph, old_from_new=old_from_new)
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """npz round-trip of CSR + flat layout + medoid + spec (+ HNSW
+        levels + grouping permutation).  Returns the actual path written
+        (numpy appends ``.npz`` when missing)."""
+        path = str(path)
+        if not path.endswith(".npz"):
+            path += ".npz"
+        arrays = dict(
+            format=np.int64(_SAVE_FORMAT),
+            spec=np.asarray(json.dumps(dataclasses.asdict(self.spec))),
+            nbrs=np.asarray(self.graph.nbrs),
+            vectors=np.asarray(self.graph.vectors),
+            medoid=np.asarray(self.graph.medoid, np.int32),
+            n_top=np.int64(self.graph.n_top),
+            flat=np.asarray(self.graph.flat),
+        )
+        if self.old_from_new is not None:
+            arrays["old_from_new"] = self.old_from_new
+        if self.hnsw is not None:
+            arrays["hnsw_entry"] = np.int64(self.hnsw.entry)
+            arrays["hnsw_num_levels"] = np.int64(len(self.hnsw.level_nbrs))
+            for i, (ln, nn) in enumerate(zip(self.hnsw.level_nbrs,
+                                             self.hnsw.level_nodes)):
+                arrays[f"hnsw_level_nbrs_{i}"] = np.asarray(ln)
+                arrays[f"hnsw_level_nodes_{i}"] = np.asarray(nn)
+        np.savez(path, **arrays)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "AnnIndex":
+        path = str(path)
+        if not path.endswith(".npz"):
+            path += ".npz"
+        z = np.load(path, allow_pickle=False)
+        fmt = int(z["format"])
+        if fmt > _SAVE_FORMAT:
+            raise ValueError(f"index file format {fmt} is newer than this "
+                             f"code ({_SAVE_FORMAT})")
+        spec = IndexSpec(**json.loads(str(z["spec"])))
+        graph = PaddedCSR(
+            nbrs=jnp.asarray(z["nbrs"]),
+            vectors=jnp.asarray(z["vectors"]),
+            medoid=jnp.asarray(z["medoid"], jnp.int32),
+            n_top=int(z["n_top"]),
+            flat=jnp.asarray(z["flat"]),
+        )
+        old_from_new = (np.asarray(z["old_from_new"])
+                        if "old_from_new" in z.files else None)
+        hnsw = None
+        if "hnsw_entry" in z.files:
+            n_levels = int(z["hnsw_num_levels"])
+            hnsw = HNSWIndex(
+                base=graph,
+                level_nbrs=tuple(jnp.asarray(z[f"hnsw_level_nbrs_{i}"])
+                                 for i in range(n_levels)),
+                level_nodes=tuple(jnp.asarray(z[f"hnsw_level_nodes_{i}"])
+                                  for i in range(n_levels)),
+                entry=int(z["hnsw_entry"]),
+            )
+        return cls(spec, graph, hnsw=hnsw, old_from_new=old_from_new)
+
+    # -- search ------------------------------------------------------------
+
+    def searcher(self, params: SearchParams = SearchParams(), *,
+                 mesh=None):
+        """A jit-ready batched callable ``fn(queries (B, d)) ->
+        SearchResult``.
+
+        The compiled executable takes the graph arrays as jit ARGUMENTS (not
+        closure constants), so searchers for different params share one
+        device-resident embedding table.  Query normalization (cosine) and
+        grouping id-remap run inside the jitted function.  Searchers are
+        cached per (params, mesh) — repeated ``search`` calls reuse them.
+        """
+        key = (params, id(mesh) if mesh is not None else None)
+        cached = self._searcher_cache.get(key)
+        if cached is not None:
+            return cached
+
+        cfg = params.to_search_config(self.spec.metric)
+        normalize = self.spec.metric == "cosine"
+        has_remap = self.old_from_new is not None
+        ofn = self._ofn
+        n_top, n_nodes = self.graph.n_top, self.graph.n_nodes
+        algorithm = params.algorithm
+        hnsw = self.hnsw
+
+        if algorithm == "sharded":
+            from repro.core.distributed import walker_sharded_search
+            the_mesh = mesh if mesh is not None else default_search_mesh()
+
+            def run(g, q):
+                return walker_sharded_search(g, q, cfg, the_mesh)
+        elif algorithm == "bfis" and hnsw is not None:
+            # greedy upper-level descent, then Algorithm 1 at level 0; the
+            # (small) upper-level tables ride along as closure constants
+            def run(g, q):
+                idx = hnsw._replace(base=g)
+                return hnsw_search_batch(idx, q, cfg)
+        elif algorithm == "bfis":
+            def run(g, q):
+                return bfis_search_batch(g, q, cfg)
+        elif algorithm == "topm":
+            def run(g, q):
+                return search_topm_batch(g, q, cfg)
+        elif algorithm == "speedann":
+            def run(g, q):
+                return search_speedann_batch(g, q, cfg)
+        else:  # pragma: no cover - SearchParams validates
+            raise ValueError(algorithm)
+
+        @jax.jit
+        def jitted(nbrs, vectors, medoid, flat, ofn_arr, q):
+            g = PaddedCSR(nbrs=nbrs, vectors=vectors, medoid=medoid,
+                          n_top=n_top, flat=flat)
+            q = q.astype(jnp.float32)
+            if normalize:
+                q = normalize_queries(q)
+            ids, dists, stats = run(g, q)
+            if has_remap:
+                ids = remap_result_ids(ids, ofn_arr, n_nodes)
+            return ids, dists, stats
+
+        graph = self.graph
+
+        def fn(queries) -> SearchResult:
+            q = jnp.asarray(queries)
+            if q.ndim != 2:
+                raise ValueError(f"queries must be (B, d), got {q.shape}")
+            out = jitted(graph.nbrs, graph.vectors, graph.medoid,
+                         graph.flat, ofn, q)
+            return SearchResult(*out)
+
+        self._searcher_cache[key] = fn
+        return fn
+
+    def search(self, queries, params: SearchParams = SearchParams(), *,
+               mesh=None) -> SearchResult:
+        """Search a (B, d) query batch; dispatches to ``params.algorithm``
+        (including the ``shard_map`` walker path for "sharded")."""
+        return self.searcher(params, mesh=mesh)(queries)
+
+    # -- ground truth ------------------------------------------------------
+
+    def exact(self, queries, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Metric-aware exact kNN over the indexed vectors (brute force) —
+        the recall reference for this index.  Returns original ids even for
+        grouped (relabelled) indices."""
+        if self._host_vectors is None:
+            # one device->host copy per index, not per call (serving loops
+            # compute per-batch ground truth); stored vectors are already
+            # normalized for cosine, so "ip" gives identical distances
+            # without re-normalizing the table every call
+            self._host_vectors = np.asarray(self.graph.vectors, np.float32)
+        q = np.asarray(queries, np.float32)
+        metric = self.spec.metric
+        if metric == "cosine":
+            q = q / np.maximum(
+                np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
+            metric = "ip"
+        ids, dists = exact_knn(self._host_vectors, q, k, metric=metric)
+        if self.old_from_new is not None:
+            ids = self.old_from_new[ids].astype(np.int32)
+        return ids, dists
+
+    # -- serving -----------------------------------------------------------
+
+    def serve(self, params: SearchParams = SearchParams(), **engine_kw):
+        """A bucketed, jit-cached :class:`repro.serve.AnnEngine` over this
+        index (``engine_kw`` forwards e.g. ``bucket_sizes``).
+
+        The engine serves the single-host algorithms (bfis | topm |
+        speedann); for the multi-device "sharded" path use
+        :meth:`search`/:meth:`searcher` with a mesh directly."""
+        from repro.serve.ann_engine import AnnEngine
+        return AnnEngine(self, params, **engine_kw)

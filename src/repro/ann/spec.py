@@ -1,0 +1,140 @@
+"""Public configuration for the :class:`repro.ann.AnnIndex` facade.
+
+The legacy ``SearchConfig`` conflated index-time knobs with per-query knobs;
+the facade splits them:
+
+* :class:`IndexSpec` — everything fixed at BUILD time and persisted with the
+  index: the graph builder (nsg | hnsw), its degree/pruning parameters, the
+  distance metric (l2 | ip | cosine), and the two-level neighbor-grouping
+  fraction (§4.4).  Two indices with different specs are different artifacts.
+* :class:`SearchParams` — everything a CALLER chooses per query batch: k, the
+  queue capacity L, expansion width M, walker count, the search algorithm
+  (bfis | topm | speedann | sharded), and the distance-kernel backend.
+
+Both are frozen dataclasses (hashable ⇒ usable as jit static arguments and
+as searcher-cache keys).  ``SearchParams.to_search_config`` lowers onto the
+legacy :class:`repro.config.SearchConfig`, which remains the internal
+plumbing type threaded through ``repro.core`` — existing call sites keep
+working unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.config import SearchConfig
+
+BUILDERS = ("nsg", "hnsw")
+METRICS = ("l2", "ip", "cosine")
+ALGORITHMS = ("bfis", "topm", "speedann", "sharded")
+
+
+@dataclass(frozen=True)
+class IndexSpec:
+    """Index-time configuration, persisted alongside the index arrays."""
+    builder: str = "nsg"         # "nsg" | "hnsw"
+    metric: str = "l2"           # "l2" | "ip" | "cosine"
+    degree: int = 32             # graph out-degree R
+    knn_k: int = 0               # kNN-seed width (0 -> degree)
+    alpha: float = 1.2           # robust-prune occlusion factor (l2/cosine)
+    ef_construction: int = 0     # builder beam width (0 -> 2 * degree)
+    passes: int = 2              # NSG refinement passes
+    n_top_fraction: float = 0.0  # §4.4 neighbor grouping: fraction of
+    #                              hottest (in-degree-ranked) vertices whose
+    #                              neighbor embeddings are flattened; > 0
+    #                              relabels vertices (results are mapped back
+    #                              to original ids transparently)
+    upper_degree: int = 16       # HNSW upper-level out-degree
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.builder not in BUILDERS:
+            raise ValueError(
+                f"unknown builder {self.builder!r}; one of {BUILDERS}")
+        if self.metric not in METRICS:
+            raise ValueError(
+                f"unknown metric {self.metric!r}; one of {METRICS}")
+        if not 0.0 <= self.n_top_fraction <= 1.0:
+            raise ValueError("n_top_fraction must be in [0, 1]")
+        if self.builder == "hnsw" and self.n_top_fraction > 0:
+            raise ValueError("neighbor grouping (n_top_fraction) is "
+                             "supported for the nsg builder only")
+
+    @property
+    def resolved_knn_k(self) -> int:
+        return self.knn_k or self.degree
+
+    @property
+    def resolved_ef(self) -> int:
+        return self.ef_construction or 2 * self.degree
+
+    def with_(self, **kw) -> "IndexSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class SearchParams:
+    """Per-query-batch configuration for ``AnnIndex.search``/``.searcher``."""
+    k: int = 10                  # neighbors to return
+    queue_len: int = 64          # L, bounded frontier capacity (recall knob)
+    m_max: int = 8               # max expansion width M
+    staged: bool = True          # §4.2 staged search (M doubles)
+    stage_every: int = 1         # t: double M every t global steps
+    num_walkers: int = 1         # W: private-queue workers
+    local_steps: int = 4         # max local steps between sync checks
+    sync_ratio: float = 0.8      # Algorithm 2 merge trigger
+    max_steps: int = 64          # global step budget
+    algorithm: str = "speedann"  # "bfis" | "topm" | "speedann" | "sharded"
+    backend: str = "ref"         # distance backend (kernel registry name)
+    dma_group: int = 8           # G: rows per DMA tile ("dma" backend)
+    visited_mode: str = "bitmap"  # "bitmap" | "loose" | "hash"
+    hash_bits: int = 14
+    global_rounds: int = 12      # static round budget ("sharded" algorithm)
+
+    def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"unknown algorithm {self.algorithm!r}; one of {ALGORITHMS}")
+
+    def with_(self, **kw) -> "SearchParams":
+        return dataclasses.replace(self, **kw)
+
+    @classmethod
+    def from_search_config(cls, cfg: SearchConfig,
+                           algorithm: str = "speedann") -> "SearchParams":
+        """Lift a legacy ``SearchConfig``'s per-query fields onto params
+        (the metric, an index-time property, is intentionally dropped)."""
+        return cls(
+            k=cfg.k, queue_len=cfg.queue_len, m_max=cfg.m_max,
+            staged=cfg.staged, stage_every=cfg.stage_every,
+            num_walkers=cfg.num_walkers, local_steps=cfg.local_steps,
+            sync_ratio=cfg.sync_ratio, max_steps=cfg.max_steps,
+            algorithm=algorithm, backend=cfg.dist_backend,
+            dma_group=cfg.dma_group, visited_mode=cfg.visited_mode,
+            hash_bits=cfg.hash_bits, global_rounds=cfg.global_rounds)
+
+    def to_search_config(self, metric: str = "l2") -> SearchConfig:
+        """Lower onto the internal plumbing config.  ``metric`` comes from
+        the index's :class:`IndexSpec`, never from the caller — the params
+        object carries only per-query knobs."""
+        cfg = SearchConfig(
+            k=self.k,
+            metric=metric,
+            queue_len=self.queue_len,
+            m_max=self.m_max,
+            staged=self.staged,
+            stage_every=self.stage_every,
+            num_walkers=self.num_walkers,
+            local_steps=self.local_steps,
+            sync_ratio=self.sync_ratio,
+            max_steps=self.max_steps,
+            visited_mode=self.visited_mode,
+            hash_bits=self.hash_bits,
+            dist_backend=self.backend,
+            dma_group=self.dma_group,
+            global_rounds=self.global_rounds,
+        )
+        if self.algorithm == "bfis":
+            # Algorithm 1 exactly: single sequential best-first walker
+            cfg = cfg.with_(m_max=1, num_walkers=1, staged=False)
+        return cfg

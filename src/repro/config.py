@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from dataclasses import dataclass, field
-from typing import Any, Mapping, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -192,6 +192,10 @@ SHAPES_BY_NAME = {s.name: s for s in ALL_SHAPES}
 class SearchConfig:
     """Speed-ANN search hyperparameters (Algorithm 3 + §4)."""
     k: int = 10                  # neighbors to return
+    # distance metric of the index: "l2" (squared L2, minimized), "ip"
+    # (negative inner product, minimized — MIPS), "cosine" (ip on unit-norm
+    # vectors; the AnnIndex facade pre-normalizes base vectors and queries).
+    metric: str = "l2"
     queue_len: int = 64          # L, bounded frontier capacity
     m_max: int = 8               # max expansion width M (paper: up to #threads)
     stage_every: int = 1         # t: double M every t global steps (paper: t=1)

@@ -1,9 +1,11 @@
 # Speed-ANN core: the paper's contribution as composable JAX modules.
 from repro.core.graph import (PaddedCSR, make_padded_csr, group_by_indegree,  # noqa: F401
                               compute_medoid)
-from repro.core.build import build_nsg, build_hnsw, exact_knn, knn_graph  # noqa: F401
+from repro.core.build import (build_nsg, build_hnsw, exact_knn,  # noqa: F401
+                              knn_graph, normalize_rows)
 from repro.core.bfis import (bfis_search_batch, search_topm,  # noqa: F401
                              search_topm_batch, hnsw_search_batch, dist_l2,
+                             dist_ip, make_ref_dist_fn, point_dist,
                              resolve_dist_fn)
 from repro.core.speedann import (search_speedann, search_speedann_batch,  # noqa: F401
                                  variant)

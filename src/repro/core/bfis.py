@@ -52,6 +52,39 @@ def dist_l2(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
     return jnp.sum(diff * diff, axis=-1)
 
 
+def dist_ip(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
+            q: jax.Array) -> jax.Array:
+    """Reference negative-inner-product distance (MIPS; cosine when the
+    index vectors and query are pre-normalized).
+
+    Padding rows of the two-level fetch are +inf, so the dot product is
+    masked explicitly by neighbor validity instead of relying on the inf
+    arithmetic (inf * 0 -> nan)."""
+    vecs = fetch_neighbor_vectors(graph, active_ids, nbr_ids)
+    d = -jnp.sum(vecs.astype(jnp.float32)
+                 * q.astype(jnp.float32)[None, None, :], axis=-1)
+    return jnp.where(nbr_ids < graph.n_nodes, d, jnp.inf)
+
+
+def make_ref_dist_fn(metric: str = "l2") -> DistFn:
+    """Metric tag -> pure-jnp two-level DistFn ("cosine" == ip: the facade
+    pre-normalizes base vectors and queries)."""
+    if metric in ("ip", "cosine"):
+        return dist_ip
+    if metric == "l2":
+        return dist_l2
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def point_dist(v: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
+    """Scalar point-to-query distance used to seed the search frontier."""
+    v = v.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if metric in ("ip", "cosine"):
+        return -jnp.dot(v, q)
+    return jnp.sum((v - q) ** 2)
+
+
 def expand(
     graph: PaddedCSR,
     q: jax.Array,
@@ -94,7 +127,7 @@ def _init_state(
     visited, _ = vs.check_and_insert(
         visited, s[None], jnp.ones((1,), bool))
     v = graph.vectors[s].astype(jnp.float32)
-    d0 = jnp.sum((v - q.astype(jnp.float32)) ** 2)[None]
+    d0 = point_dist(v, q, cfg.metric)[None]
     frontier, _, _ = fq.insert(frontier, s[None], d0)
     stats = SearchStats.zero()._replace(dist_comps=jnp.int32(1))
     return _TopMState(frontier, visited, stats)
@@ -173,7 +206,7 @@ def bfis_search_batch(graph, queries, cfg: SearchConfig, **kw):
 
 def greedy_descent(
     level_nbrs: jax.Array, vectors: jax.Array, entry: jax.Array,
-    q: jax.Array, max_hops: int = 64,
+    q: jax.Array, max_hops: int = 64, metric: str = "l2",
 ) -> jax.Array:
     """Greedy walk on one upper level: hop to the closest neighbor until a
     local minimum (HNSW's ef=1 upper-level search)."""
@@ -182,7 +215,7 @@ def greedy_descent(
 
     def dist_of(i):
         v = vectors[jnp.minimum(i, n - 1)].astype(jnp.float32)
-        return jnp.where(i < n, jnp.sum((v - qf) ** 2), jnp.inf)
+        return jnp.where(i < n, point_dist(v, qf, metric), jnp.inf)
 
     def cond(carry):
         cur, cur_d, moved, hops = carry
@@ -192,7 +225,10 @@ def greedy_descent(
         cur, cur_d, _, hops = carry
         nb = level_nbrs[cur]                        # (R_l,)
         vecs = vectors[jnp.minimum(nb, n - 1)].astype(jnp.float32)
-        d = jnp.sum((vecs - qf[None, :]) ** 2, axis=-1)
+        if metric in ("ip", "cosine"):
+            d = -jnp.sum(vecs * qf[None, :], axis=-1)
+        else:
+            d = jnp.sum((vecs - qf[None, :]) ** 2, axis=-1)
         d = jnp.where(nb < n, d, jnp.inf)
         j = jnp.argmin(d)
         better = d[j] < cur_d
@@ -205,16 +241,19 @@ def greedy_descent(
     return cur
 
 
-def hnsw_search_batch(index, queries: jax.Array, cfg: SearchConfig):
+def hnsw_search_batch(index, queries: jax.Array, cfg: SearchConfig,
+                      dist_fn: Optional[DistFn] = None):
     """HNSW baseline: greedy descent through upper levels, BFiS at level 0."""
     base = index.base
 
     def one(q):
         cur = jnp.asarray(index.entry, jnp.int32)
         for lvl in range(len(index.level_nbrs) - 1, -1, -1):
-            cur = greedy_descent(index.level_nbrs[lvl], base.vectors, cur, q)
+            cur = greedy_descent(index.level_nbrs[lvl], base.vectors, cur, q,
+                                 metric=cfg.metric)
         return cur
 
     starts = jax.vmap(one)(queries)
     return search_topm_batch(
-        base, queries, cfg.with_(m_max=1, staged=False), start=starts)
+        base, queries, cfg.with_(m_max=1, staged=False), start=starts,
+        dist_fn=dist_fn)

@@ -14,8 +14,8 @@ are offline C++).  Search-time code never calls into this module.
 """
 from __future__ import annotations
 
-import math
-from typing import List, NamedTuple, Optional, Tuple
+import functools
+from typing import List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,37 +28,53 @@ from repro.core.graph import PaddedCSR, compute_medoid, make_padded_csr
 # Exact kNN (blocked brute force) — ground truth + kNN-graph seed
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def _l2_block(q: jax.Array, x: jax.Array) -> jax.Array:
-    """Squared L2 distances (B, N) between query block and data block."""
+def normalize_rows(x: np.ndarray) -> np.ndarray:
+    """Unit-normalize rows (cosine = inner product on normalized vectors)."""
+    x = np.asarray(x, np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _dist_block(q: jax.Array, x: jax.Array, metric: str = "l2") -> jax.Array:
+    """(B, N) distances between query block and data block; smaller =
+    closer for every metric ("ip" = negative inner product)."""
     q = q.astype(jnp.float32)
     x = x.astype(jnp.float32)
+    if metric == "ip":
+        return -(q @ x.T)
     q2 = jnp.sum(q * q, axis=1, keepdims=True)
     x2 = jnp.sum(x * x, axis=1)
     return q2 + x2[None, :] - 2.0 * (q @ x.T)
 
 
 def exact_knn(
-    data: np.ndarray, queries: np.ndarray, k: int, block: int = 2048
+    data: np.ndarray, queries: np.ndarray, k: int, block: int = 2048,
+    metric: str = "l2",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Exact k nearest neighbors of ``queries`` within ``data``.
 
-    Returns (ids (Q, k) int32, dists (Q, k) float32) sorted ascending.
+    ``metric`` is "l2" (squared L2), "ip" (negative inner product), or
+    "cosine" (ip after normalizing BOTH sides here).  Returns
+    (ids (Q, k) int32, dists (Q, k) float32) sorted ascending.
     """
+    if metric == "cosine":
+        data, queries = normalize_rows(data), normalize_rows(queries)
+        metric = "ip"
     data_j = jnp.asarray(data)
     out_ids, out_d = [], []
     for s in range(0, queries.shape[0], block):
         q = jnp.asarray(queries[s:s + block])
-        d = _l2_block(q, data_j)                      # (b, N)
+        d = _dist_block(q, data_j, metric=metric)     # (b, N)
         d_top, i_top = jax.lax.top_k(-d, k)
         out_ids.append(np.asarray(i_top, np.int32))
         out_d.append(np.asarray(-d_top, np.float32))
     return np.concatenate(out_ids), np.concatenate(out_d)
 
 
-def knn_graph(data: np.ndarray, k: int, block: int = 2048) -> np.ndarray:
+def knn_graph(data: np.ndarray, k: int, block: int = 2048,
+              metric: str = "l2") -> np.ndarray:
     """(N, k) kNN graph excluding self-edges."""
-    ids, _ = exact_knn(data, data, k + 1, block)
+    ids, _ = exact_knn(data, data, k + 1, block, metric=metric)
     n = data.shape[0]
     rows = []
     for i in range(n):
@@ -73,15 +89,30 @@ def knn_graph(data: np.ndarray, k: int, block: int = 2048) -> np.ndarray:
 # NSG/Vamana-style α-pruned graph
 # ---------------------------------------------------------------------------
 
+def _prune_dists(data: np.ndarray, ids: np.ndarray, point: np.ndarray,
+                 metric: str) -> np.ndarray:
+    """Distances of data[ids] to ``point`` on the builder's pruning scale
+    (actual L2 for "l2", negative inner product for "ip")."""
+    if metric == "ip":
+        return -(data[ids] @ point)
+    diff = data[ids] - point
+    return np.sqrt(np.maximum(np.einsum("ij,ij->i", diff, diff), 0.0))
+
+
 def _robust_prune(
     data: np.ndarray, node: int, cand_ids: np.ndarray, cand_d: np.ndarray,
-    degree: int, alpha: float,
+    degree: int, alpha: float, metric: str = "l2",
 ) -> np.ndarray:
     """Monotonic-RNG α-prune: greedily keep the closest candidate c, then
-    drop every remaining candidate c' with α·d(c, c') ≤ d(node, c')."""
+    drop every remaining candidate c' with α·d(c, c') ≤ d(node, c').
+
+    For "ip" the same occlusion rule runs on negative-inner-product
+    distances (the ip-NSW heuristic) with α forced to 1: scaling negative
+    distances would invert the α>1 "keep more" semantics."""
     order = np.argsort(cand_d, kind="stable")
     cand_ids = cand_ids[order]
     cand_d = cand_d[order]
+    eff_alpha = 1.0 if metric == "ip" else alpha
     keep: List[int] = []
     alive = np.ones(cand_ids.shape[0], bool)
     alive &= cand_ids != node
@@ -93,20 +124,27 @@ def _robust_prune(
         if len(keep) >= degree:
             break
         # occlusion rule: drop c' when c is much closer to c' than node is
-        diff = data[cand_ids] - data[c]
-        d_cc = np.sqrt(np.maximum(np.einsum("ij,ij->i", diff, diff), 0.0))
-        alive = alive & ~(alpha * d_cc <= cand_d)
+        d_cc = _prune_dists(data, cand_ids, data[c], metric)
+        alive = alive & ~(eff_alpha * d_cc <= cand_d)
         alive[i] = False
     return np.asarray(keep, np.int32)
 
 
 def _greedy_search_np(
     data: np.ndarray, nbrs: List[np.ndarray], start: int, q: np.ndarray,
-    ef: int,
+    ef: int, metric: str = "l2",
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Host-side best-first search used during construction (Vamana pass)."""
     import heapq
-    d0 = float(np.sum((data[start] - q) ** 2))
+
+    if metric == "ip":
+        def pd(u):
+            return -float(data[u] @ q)
+    else:
+        def pd(u):
+            return float(np.sum((data[u] - q) ** 2))
+
+    d0 = pd(start)
     cand = [(d0, start)]
     visited = {start}
     best: List[Tuple[float, int]] = [(-d0, start)]
@@ -119,7 +157,7 @@ def _greedy_search_np(
             if u in visited or u >= data.shape[0]:
                 continue
             visited.add(u)
-            du = float(np.sum((data[u] - q) ** 2))
+            du = pd(u)
             if len(best) < ef or du < -best[0][0]:
                 heapq.heappush(cand, (du, u))
                 heapq.heappush(best, (-du, u))
@@ -139,14 +177,27 @@ def build_nsg(
     ef_construction: int = 64,
     seed: int = 0,
     passes: int = 2,
+    metric: str = "l2",
 ) -> PaddedCSR:
     """Vamana/NSG-style construction: kNN seed + α-pruned refinement passes
-    from the medoid + reverse-edge augmentation with re-pruning."""
+    from the medoid + reverse-edge augmentation with re-pruning.
+
+    ``metric``: "l2" (default), "ip" (MIPS graph — ip-NSW-style pruning on
+    negative-inner-product distances), or "cosine" (the base vectors are
+    unit-normalized HERE and the graph built with l2, which orders
+    identically to cosine on the unit sphere — the returned index stores
+    the normalized vectors).
+    """
     n = data.shape[0]
     data = np.asarray(data, np.float32)
-    knn = knn_graph(data, knn_k)
+    if metric == "cosine":
+        data = normalize_rows(data)
+        metric = "l2"
+    elif metric not in ("l2", "ip"):
+        raise ValueError(f"unknown metric {metric!r}")
+    knn = knn_graph(data, knn_k, metric=metric)
     nbrs: List[np.ndarray] = [knn[i][knn[i] < n] for i in range(n)]
-    medoid = compute_medoid(data)
+    medoid = compute_medoid(data, metric=metric)
     rng = np.random.RandomState(seed)
 
     for p in range(passes):
@@ -154,14 +205,15 @@ def build_nsg(
         order = rng.permutation(n)
         for node in order:
             cand_ids, cand_d = _greedy_search_np(
-                data, nbrs, medoid, data[node], ef_construction)
+                data, nbrs, medoid, data[node], ef_construction,
+                metric=metric)
             # include current neighbors as candidates
             cur = nbrs[node]
             allc = np.unique(np.concatenate([cand_ids, cur]))
             allc = allc[allc != node]
-            diff = data[allc] - data[node]
-            d = np.sqrt(np.maximum(np.einsum("ij,ij->i", diff, diff), 0.0))
-            pruned = _robust_prune(data, node, allc, d, degree, a)
+            d = _prune_dists(data, allc, data[node], metric)
+            pruned = _robust_prune(data, node, allc, d, degree, a,
+                                   metric=metric)
             nbrs[node] = pruned
             # reverse edges with degree cap + re-prune
             for u in pruned:
@@ -170,10 +222,9 @@ def build_nsg(
                     continue
                 lst = np.concatenate([nbrs[u], [node]])
                 if lst.shape[0] > degree:
-                    diff = data[lst] - data[u]
-                    d_u = np.sqrt(np.maximum(
-                        np.einsum("ij,ij->i", diff, diff), 0.0))
-                    lst = _robust_prune(data, u, lst, d_u, degree, a)
+                    d_u = _prune_dists(data, lst, data[u], metric)
+                    lst = _robust_prune(data, u, lst, d_u, degree, a,
+                                        metric=metric)
                 nbrs[u] = lst.astype(np.int32)
 
     padded = np.full((n, degree), n, np.int32)
@@ -201,14 +252,21 @@ def build_hnsw(
     ml: float = 0.36,                # 1/ln(M) with M=16
     seed: int = 0,
     alpha: float = 1.2,
+    metric: str = "l2",
 ) -> HNSWIndex:
     """Simplified HNSW: geometric level sampling; each upper level is an
-    α-pruned kNN graph over its members; level 0 reuses the NSG builder."""
+    α-pruned kNN graph over its members; level 0 reuses the NSG builder.
+    ``metric`` as in :func:`build_nsg` (cosine normalizes here)."""
     n = data.shape[0]
+    data = np.asarray(data, np.float32)
+    if metric == "cosine":
+        data = normalize_rows(data)
+        metric = "l2"
     rng = np.random.RandomState(seed)
     levels = np.minimum(
         (-np.log(np.maximum(rng.uniform(size=n), 1e-12)) * ml).astype(int), 6)
-    base = build_nsg(data, degree=degree, alpha=alpha, seed=seed, passes=2)
+    base = build_nsg(data, degree=degree, alpha=alpha, seed=seed, passes=2,
+                     metric=metric)
     level_nbrs, level_nodes = [], []
     max_level = int(levels.max())
     entry = int(np.argmax(levels))
@@ -218,7 +276,7 @@ def build_hnsw(
             break
         sub = data[members]
         k = min(upper_degree, members.shape[0] - 1)
-        sub_knn = knn_graph(sub, k)
+        sub_knn = knn_graph(sub, k, metric=metric)
         # map back to global ids, pad with n
         g = np.where(sub_knn < members.shape[0], members[np.minimum(
             sub_knn, members.shape[0] - 1)], n).astype(np.int32)

@@ -32,15 +32,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+# --- jax version compat: shard_map location + replication-check kwarg ------
+try:                                      # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+except ImportError:                       # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking off (stats
+    leaves are reduced to uniform values manually)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_SHARD_MAP_KW)
+
+
+def make_search_mesh(shape, names=("data", "model")) -> Mesh:
+    """Version-portable mesh construction for the search meshes: newer jax
+    wants explicit ``axis_types``, 0.4.35+ has ``jax.make_mesh`` without
+    that parameter, and older jax only has the raw ``Mesh`` constructor."""
+    shape, names = tuple(shape), tuple(names)
+    if hasattr(jax, "make_mesh"):
+        try:
+            axis_types = (jax.sharding.AxisType.Auto,) * len(names)
+            return jax.make_mesh(shape, names, axis_types=axis_types)
+        except (AttributeError, TypeError):
+            return jax.make_mesh(shape, names)
+    n = 1
+    for s in shape:
+        n *= s
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, names)
 
 from repro.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
-from repro.core.bfis import DistFn, expand, resolve_dist_fn, staged_m
-from repro.core.graph import PaddedCSR, make_padded_csr
+from repro.core.bfis import (DistFn, expand, point_dist, resolve_dist_fn,
+                             staged_m)
+from repro.core.graph import PaddedCSR
 from repro.core.metrics import SearchStats
-from repro.core.speedann import check_metrics
 
 
 # ---------------------------------------------------------------------------
@@ -120,7 +152,7 @@ def walker_sharded_search(
         visited, _ = vs.check_and_insert(
             visited, medoid[None], jnp.ones((1,), bool))
         v0 = vectors[medoid].astype(jnp.float32)
-        d0 = jnp.sum((v0 - q.astype(jnp.float32)) ** 2)[None]
+        d0 = point_dist(v0, q, cfg.metric)[None]
         frontier, _, _ = fq.insert(frontier, medoid[None], d0)
         frontier, visited, _, n0 = expand(g, q, frontier, visited, 1, 1,
                                           dist_fn)
@@ -191,7 +223,6 @@ def walker_sharded_search(
         in_specs=(rep, rep, rep, rep, P(data_axis, None)),
         out_specs=(P(data_axis, None), P(data_axis, None),
                    jax.tree.map(lambda _: P(data_axis), SearchStats.zero())),
-        check_vma=False,
     )
     return fn(graph.nbrs, graph.vectors, graph.medoid, graph.flat, queries)
 
@@ -296,7 +327,6 @@ def corpus_sharded_search(
         in_specs=(P(shard_axis), P(shard_axis), P(shard_axis), P(shard_axis),
                   P(data_axis, None)),
         out_specs=(P(data_axis, None), P(data_axis, None)),
-        check_vma=False,
     )
     return fn(index.nbrs, index.vectors, index.medoids, index.offsets,
               queries)

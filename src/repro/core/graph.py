@@ -50,18 +50,20 @@ def make_padded_csr(
     vectors: np.ndarray,
     medoid: Optional[int] = None,
     n_top: int = 0,
+    metric: str = "l2",
 ) -> PaddedCSR:
     """Build a PaddedCSR from host arrays; optionally flatten top vertices.
 
     ``nbrs`` rows may be ragged-padded with any value >= N or < 0; they are
-    normalized to the sentinel N.
+    normalized to the sentinel N.  ``metric`` only affects the default
+    medoid choice when ``medoid`` is None.
     """
     n, _ = nbrs.shape
     nbrs = nbrs.astype(np.int32)
     nbrs = np.where((nbrs < 0) | (nbrs >= n), n, nbrs)
     vectors = np.asarray(vectors)
     if medoid is None:
-        medoid = int(compute_medoid(vectors))
+        medoid = int(compute_medoid(vectors, metric=metric))
     flat = _flatten_top(nbrs, vectors, n_top)
     return PaddedCSR(
         nbrs=jnp.asarray(nbrs),
@@ -85,10 +87,18 @@ def _flatten_top(nbrs: np.ndarray, vectors: np.ndarray, n_top: int) -> np.ndarra
     return flat.astype(vectors.dtype)
 
 
-def compute_medoid(vectors: np.ndarray, sample: int = 4096) -> int:
-    """Vertex closest to the dataset centroid (NSG's navigating node)."""
-    centroid = np.asarray(vectors, np.float32).mean(axis=0)
-    d = np.linalg.norm(np.asarray(vectors, np.float32) - centroid, axis=1)
+def compute_medoid(vectors: np.ndarray, metric: str = "l2") -> int:
+    """Vertex closest to the dataset centroid (NSG's navigating node).
+
+    For "ip" the navigating node is the vertex with the largest inner
+    product against the centroid (the MIPS analog of "closest"); "cosine"
+    callers pass pre-normalized vectors, where l2 and ip orderings agree.
+    """
+    v = np.asarray(vectors, np.float32)
+    centroid = v.mean(axis=0)
+    if metric == "ip":
+        return int(np.argmax(v @ centroid))
+    d = np.linalg.norm(v - centroid, axis=1)
     return int(np.argmin(d))
 
 

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from repro.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
-from repro.core.bfis import DistFn, expand, resolve_dist_fn, staged_m
+from repro.core.bfis import (DistFn, expand, point_dist, resolve_dist_fn,
+                             staged_m)
 from repro.core.metrics import SearchStats
 
 
@@ -116,7 +117,7 @@ def search_speedann(
     s0 = graph.medoid if start is None else start.astype(jnp.int32)
     visited0, _ = vs.check_and_insert(visited0, s0[None], jnp.ones((1,), bool))
     v0 = graph.vectors[s0].astype(jnp.float32)
-    d0 = jnp.sum((v0 - q.astype(jnp.float32)) ** 2)[None]
+    d0 = point_dist(v0, q, cfg.metric)[None]
     frontier, _, _ = fq.insert(frontier, s0[None], d0)
     # Expand the starting point once before dividing work, so the first
     # scatter has a full frontier to distribute (paper Fig. 4: the search
@@ -188,8 +189,11 @@ def variant(cfg: SearchConfig, name: str) -> SearchConfig:
     """The paper's §5.3 configurations."""
     if name == "bfis":               # NSG baseline
         return cfg.with_(m_max=1, num_walkers=1, staged=False)
-    if name == "edge_parallel":      # NSG-32T: parallel expansion, M=1
-        return cfg.with_(m_max=1, num_walkers=1, staged=False)
+    if name == "edge_parallel":      # NSG-32T: one global candidate per
+        # step (M=1), but its edge expansion is spread across ALL walkers —
+        # unlike "bfis" the walker pool is kept, so the §5.3 ablation
+        # separates edge parallelism from path parallelism.
+        return cfg.with_(m_max=1, staged=False)
     if name == "nostaged":           # Speed-ANN-NoStaged: fixed M=W
         return cfg.with_(staged=False)
     if name == "nosync":             # Speed-ANN-NoSync: all workers start at

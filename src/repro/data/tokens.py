@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import queue as _queue
 import threading
-from typing import Iterator, NamedTuple, Optional
+from typing import Iterator, NamedTuple
 
 import numpy as np
 

@@ -25,7 +25,6 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _xor_perm(x: jax.Array, j: int) -> jax.Array:

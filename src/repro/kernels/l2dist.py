@@ -35,22 +35,30 @@ from jax.experimental.pallas import tpu as pltpu
 # Variant 1: scalar-prefetch row gather
 # ---------------------------------------------------------------------------
 
-def _rowgather_kernel(ids_ref, row_ref, q_ref, out_ref, *, n_nodes: int):
+def _rowgather_kernel(ids_ref, row_ref, q_ref, out_ref, *, n_nodes: int,
+                      metric: str):
     b = pl.program_id(0)
     c = pl.program_id(1)
     sid = ids_ref[b, c]
     row = row_ref[0, :].astype(jnp.float32)
     q = q_ref[0, :].astype(jnp.float32)
-    diff = row - q
-    dist = jnp.sum(diff * diff)
+    if metric == "ip":
+        dist = -jnp.sum(row * q)
+    else:
+        diff = row - q
+        dist = jnp.sum(diff * diff)
     out_ref[0, 0] = jnp.where(sid < n_nodes, dist, jnp.float32(jnp.inf))
 
 
 def l2dist_rowgather(
     table: jax.Array, ids: jax.Array, queries: jax.Array,
-    *, interpret: bool = True,
+    *, interpret: bool = True, metric: str = "l2",
 ) -> jax.Array:
-    """(N,d) table, (B,C) ids, (B,d) queries -> (B,C) f32 sq-distances."""
+    """(N,d) table, (B,C) ids, (B,d) queries -> (B,C) f32 distances.
+
+    ``metric="l2"`` -> squared L2; ``"ip"`` -> negative inner product
+    (smaller = closer either way; padded ids >= N report +inf).
+    """
     n, d = table.shape
     bsz, c = ids.shape
 
@@ -67,7 +75,7 @@ def l2dist_rowgather(
         ],
         out_specs=pl.BlockSpec((1, 1), lambda b, cc, ids_ref: (b, cc)),
     )
-    kernel = functools.partial(_rowgather_kernel, n_nodes=n)
+    kernel = functools.partial(_rowgather_kernel, n_nodes=n, metric=metric)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -81,7 +89,7 @@ def l2dist_rowgather(
 # ---------------------------------------------------------------------------
 
 def _dma_kernel(ids_ref, table_ref, q_ref, out_ref, rows, sem,
-                *, n_nodes: int, g: int):
+                *, n_nodes: int, g: int, metric: str):
     b = pl.program_id(0)
     cb = pl.program_id(1)
     # issue G row DMAs HBM->VMEM (Mosaic overlaps them; interpret mode runs
@@ -97,22 +105,26 @@ def _dma_kernel(ids_ref, table_ref, q_ref, out_ref, rows, sem,
         ).wait()
     x = rows[...].astype(jnp.float32)                      # (G, d)
     q = q_ref[0, :].astype(jnp.float32)                    # (d,)
-    x2 = jnp.sum(x * x, axis=1)
-    q2 = jnp.sum(q * q)
     xq = jax.lax.dot_general(                              # MXU (G,d)x(d,1)
         x, q[:, None], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)[:, 0]
-    dist = x2 - 2.0 * xq + q2
+    if metric == "ip":
+        dist = -xq
+    else:
+        x2 = jnp.sum(x * x, axis=1)
+        q2 = jnp.sum(q * q)
+        dist = jnp.maximum(x2 - 2.0 * xq + q2, 0.0)
     valid = jnp.stack([ids_ref[b, cb * g + i] < n_nodes for i in range(g)])
-    out_ref[0, :] = jnp.where(valid, jnp.maximum(dist, 0.0),
-                              jnp.float32(jnp.inf))
+    out_ref[0, :] = jnp.where(valid, dist, jnp.float32(jnp.inf))
 
 
 def l2dist_dma(
     table: jax.Array, ids: jax.Array, queries: jax.Array,
-    *, g: int = 8, interpret: bool = True,
+    *, g: int = 8, interpret: bool = True, metric: str = "l2",
 ) -> jax.Array:
-    """DMA-tile variant; requires C % g == 0 (pad ids with N to align)."""
+    """DMA-tile variant; requires C % g == 0 (pad ids with N to align).
+
+    ``metric="ip"`` keeps the same MXU matvec and skips the norm terms."""
     n, d = table.shape
     bsz, c = ids.shape
     assert c % g == 0, f"candidate count {c} not divisible by tile {g}"
@@ -130,7 +142,7 @@ def l2dist_dma(
             pltpu.SemaphoreType.DMA,
         ],
     )
-    kernel = functools.partial(_dma_kernel, n_nodes=n, g=g)
+    kernel = functools.partial(_dma_kernel, n_nodes=n, g=g, metric=metric)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

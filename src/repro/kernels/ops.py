@@ -19,23 +19,32 @@ from repro.kernels import ref as _ref
 INTERPRET = True   # flip on real TPU
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret", "g"))
+@functools.partial(jax.jit,
+                   static_argnames=("impl", "interpret", "g", "metric"))
 def l2dist(
     table: jax.Array, ids: jax.Array, queries: jax.Array,
     impl: str = "rowgather", interpret: bool | None = None, g: int = 8,
+    metric: str = "l2",
 ) -> jax.Array:
-    """Fused gather + squared-L2: (N,d), (B,C), (B,d) -> (B,C) f32.
+    """Fused gather + distance: (N,d), (B,C), (B,d) -> (B,C) f32.
+
+    ``metric`` selects the reduction: "l2" (squared L2) or "ip"/"cosine"
+    (negative inner product; cosine callers pre-normalize, so the kernels
+    treat it as ip).  Smaller = closer for every metric.
 
     ``g`` is the DMA tile size ("dma" impl only; requires C % g == 0 —
     ``registry.pad_ids_to_tile`` handles ragged candidate counts).
     """
     itp = INTERPRET if interpret is None else interpret
+    kmetric = "ip" if metric in ("ip", "cosine") else "l2"
     if impl == "ref":
-        return _ref.l2dist_ref(table, ids, queries)
+        return _ref.dist_ref(table, ids, queries, metric=kmetric)
     if impl == "rowgather":
-        return _l2.l2dist_rowgather(table, ids, queries, interpret=itp)
+        return _l2.l2dist_rowgather(table, ids, queries, interpret=itp,
+                                    metric=kmetric)
     if impl == "dma":
-        return _l2.l2dist_dma(table, ids, queries, g=g, interpret=itp)
+        return _l2.l2dist_dma(table, ids, queries, g=g, interpret=itp,
+                              metric=kmetric)
     raise ValueError(impl)
 
 

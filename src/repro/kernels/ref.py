@@ -9,21 +9,34 @@ import jax
 import jax.numpy as jnp
 
 
-def l2dist_ref(table: jax.Array, ids: jax.Array, queries: jax.Array
-               ) -> jax.Array:
-    """Gather + squared-L2 distance oracle.
+def dist_ref(table: jax.Array, ids: jax.Array, queries: jax.Array,
+             metric: str = "l2") -> jax.Array:
+    """Gather + distance oracle (metric-general).
 
     table:   (N, d) feature vectors
     ids:     (B, C) int32 candidate ids; ids >= N are padding -> +inf
     queries: (B, d)
-    returns: (B, C) float32 squared distances
+    metric:  "l2" -> squared L2; "ip"/"cosine" -> negative inner product
+             (cosine assumes pre-normalized rows/queries, so it IS ip)
+    returns: (B, C) float32 distances, smaller = closer for every metric
     """
     n = table.shape[0]
     safe = jnp.minimum(ids, n - 1)
     rows = table[safe].astype(jnp.float32)                # (B, C, d)
     q = queries.astype(jnp.float32)[:, None, :]           # (B, 1, d)
-    d2 = jnp.sum((rows - q) ** 2, axis=-1)
-    return jnp.where(ids < n, d2, jnp.inf).astype(jnp.float32)
+    if metric in ("ip", "cosine"):
+        d = -jnp.sum(rows * q, axis=-1)
+    elif metric == "l2":
+        d = jnp.sum((rows - q) ** 2, axis=-1)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    return jnp.where(ids < n, d, jnp.inf).astype(jnp.float32)
+
+
+def l2dist_ref(table: jax.Array, ids: jax.Array, queries: jax.Array
+               ) -> jax.Array:
+    """Squared-L2 special case of :func:`dist_ref` (kept for callers/tests)."""
+    return dist_ref(table, ids, queries, metric="l2")
 
 
 def sort_pairs_ref(keys: jax.Array, *payloads: jax.Array):

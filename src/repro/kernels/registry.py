@@ -70,19 +70,23 @@ def pad_ids_to_tile(ids: jax.Array, tile: int, n_nodes: int) -> jax.Array:
         [ids, jnp.full((pad,), n_nodes, ids.dtype)])
 
 
-def make_dist_fn(impl: str = "rowgather", *, dma_group: int = 8,
+def make_dist_fn(impl: str = "rowgather", *, metric: str = "l2",
+                 dma_group: int = 8,
                  interpret: bool | None = None) -> Callable:
     """Adapter producing a ``core.bfis.DistFn`` that routes the expansion's
     per-query (M, R) distance computations through the batched (B, C)
     kernels (B=1, C=M·R; C padded to the DMA tile for ``impl="dma"``).
+
+    ``metric`` is the index metric tag ("l2" | "ip" | "cosine"); every
+    backend serves every metric (cosine = ip on pre-normalized vectors).
 
     Note: the kernel reads the flat embedding table; the two-level flattened
     layout is exploited by the pipeline's row streaming itself (hot rows stay
     in VMEM across adjacent grid steps), so no separate path is needed.
     """
     if impl == "ref":
-        from repro.core.bfis import dist_l2
-        return dist_l2
+        from repro.core.bfis import make_ref_dist_fn
+        return make_ref_dist_fn(metric)
 
     def dist_fn(graph, active_ids, nbr_ids, q):
         m, r = nbr_ids.shape
@@ -90,23 +94,29 @@ def make_dist_fn(impl: str = "rowgather", *, dma_group: int = 8,
         if impl == "dma":
             flat = pad_ids_to_tile(flat, dma_group, graph.n_nodes)
         d = ops.l2dist(graph.vectors, flat[None, :], q[None, :],
-                       impl=impl, interpret=interpret, g=dma_group)
+                       impl=impl, interpret=interpret, g=dma_group,
+                       metric=metric)
         return d[0, :m * r].reshape(m, r)
     return dist_fn
+
+
+def _cfg_metric(cfg) -> str:
+    return getattr(cfg, "metric", "l2") or "l2"
 
 
 @register_backend("ref")
 def _ref_backend(cfg):
     # lazy import: core.bfis imports this module for resolution
-    from repro.core.bfis import dist_l2
-    return dist_l2
+    from repro.core.bfis import make_ref_dist_fn
+    return make_ref_dist_fn(_cfg_metric(cfg))
 
 
 @register_backend("rowgather")
 def _rowgather_backend(cfg):
-    return make_dist_fn("rowgather")
+    return make_dist_fn("rowgather", metric=_cfg_metric(cfg))
 
 
 @register_backend("dma")
 def _dma_backend(cfg):
-    return make_dist_fn("dma", dma_group=int(getattr(cfg, "dma_group", 8)))
+    return make_dist_fn("dma", metric=_cfg_metric(cfg),
+                        dma_group=int(getattr(cfg, "dma_group", 8)))

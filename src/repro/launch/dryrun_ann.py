@@ -27,7 +27,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.config import SearchConfig  # noqa: E402
+from repro.ann import SearchParams  # noqa: E402
 from repro.core.distributed import (ShardedIndex, corpus_sharded_search,  # noqa: E402
                                     walker_sharded_search)
 from repro.core.graph import PaddedCSR  # noqa: E402
@@ -42,9 +42,12 @@ R = 24          # graph out-degree
 N_SHARD = 48_000_000
 N_WALKER_GRAPH = 10_000_000
 QUERIES = 1024
-CFG = SearchConfig(k=10, queue_len=128, m_max=16, num_walkers=16,
-                   max_steps=64, local_steps=8, sync_ratio=0.8,
-                   visited_mode="hash", hash_bits=16, global_rounds=12)
+# per-query knobs via the facade's params type; the distributed cells lower
+# the resolved internal config (the l2 DEEP-analog metric)
+PARAMS = SearchParams(k=10, queue_len=128, m_max=16, num_walkers=16,
+                      max_steps=64, local_steps=8, sync_ratio=0.8,
+                      visited_mode="hash", hash_bits=16, global_rounds=12)
+CFG = PARAMS.to_search_config("l2")
 
 
 def sds(shape, dtype):

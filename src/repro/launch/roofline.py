@@ -15,7 +15,7 @@ wire bytes for AG/RS/CP; all-reduce counted 2× for the ring RS+AG).
 from __future__ import annotations
 
 import re
-from typing import Dict, Tuple
+from typing import Dict
 
 # TPU v5e-class hardware constants (per chip)
 PEAK_FLOPS = 197e12          # bf16

@@ -3,8 +3,7 @@ M-RoPE), initializers.  Functional style — params are nested dicts of
 jnp arrays; every layer is (init, apply) pair."""
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

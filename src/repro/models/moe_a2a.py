@@ -27,7 +27,7 @@ match ``moe.moe_ffn`` exactly when capacities are generous (tested on an
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

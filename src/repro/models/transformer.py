@@ -7,13 +7,12 @@ meshes.  KV caches are stacked per layer with a leading ``layers`` axis.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import FAMILY_MOE, FAMILY_VLM, ModelConfig
+from repro.config import FAMILY_MOE, ModelConfig
 from repro.models import attention as attn
 from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod

@@ -8,7 +8,7 @@ precomputes the per-layer cross-attention K/V from the encoder output once.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

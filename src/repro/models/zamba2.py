@@ -15,7 +15,7 @@ layers — HLO stays O(1) in depth while allowing the heterogeneous interleave.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

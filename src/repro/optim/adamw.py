@@ -6,7 +6,6 @@ sharding (GSPMD propagates it), which IS ZeRO-1 when params are FSDP-sharded.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

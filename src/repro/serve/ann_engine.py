@@ -13,9 +13,15 @@ adaptive synchronization, bounded step budgets) with the distance backend
 resolved once from ``SearchConfig.dist_backend`` — kernel selection is a
 config knob, not a code path.
 
+The engine is a stage of the ``repro.ann`` facade lifecycle: pass an
+:class:`repro.ann.AnnIndex` + :class:`repro.ann.SearchParams` (or call
+``index.serve(params)``) and the engine inherits the index's metric
+(normalizing queries for cosine) and neighbor-grouping id remap.  The
+legacy ``(PaddedCSR, SearchConfig)`` form keeps working.
+
 Typical use::
 
-    engine = AnnEngine(graph, cfg)
+    engine = AnnIndex.build(data, spec).serve(params)
     engine.warmup(dim)                  # compile every bucket up front
     res = engine.search(queries)        # (B, d) for any B
     print(engine.metrics())             # recall / latency / cache counters
@@ -29,8 +35,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ann.index import (AnnIndex, normalize_queries, remap_result_ids)
+from repro.ann.spec import SearchParams
 from repro.config import SearchConfig
-from repro.core.bfis import (DistFn, resolve_dist_fn, search_topm_batch)
+from repro.core.bfis import (DistFn, bfis_search_batch, hnsw_search_batch,
+                             resolve_dist_fn, search_topm_batch)
 from repro.core.metrics import SearchStats, recall_at_k
 from repro.core.speedann import search_speedann_batch
 
@@ -39,6 +48,7 @@ DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
 _ALGORITHMS = {
     "speedann": search_speedann_batch,
     "topm": search_topm_batch,
+    "bfis": bfis_search_batch,
 }
 
 
@@ -59,10 +69,33 @@ class AnnEngine:
         graph,
         cfg: SearchConfig,
         *,
-        algorithm: str = "speedann",
+        algorithm: Optional[str] = None,
         bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
         dist_fn: Optional[DistFn] = None,
     ):
+        self.index: Optional[AnnIndex] = None
+        self._normalize = False
+        self._old_from_new = None
+        if isinstance(graph, AnnIndex):
+            self.index = graph
+            graph = self.index.graph
+            self._normalize = self.index.spec.metric == "cosine"
+            self._old_from_new = self.index.old_from_new
+        metric = self.index.spec.metric if self.index is not None else None
+        if isinstance(cfg, SearchParams):
+            if algorithm is None:
+                algorithm = cfg.algorithm
+            cfg = cfg.to_search_config(metric or "l2")
+        elif metric is not None and cfg.metric != metric:
+            # the index's metric is authoritative over a hand-built config
+            cfg = cfg.with_(metric=metric)
+        if algorithm is None:
+            algorithm = "speedann"
+        if algorithm == "sharded":
+            raise ValueError(
+                "the batched engine serves single-host algorithms "
+                f"{tuple(_ALGORITHMS)}; for the shard_map walker path use "
+                "AnnIndex.search(queries, params, mesh=...) directly")
         if algorithm not in _ALGORITHMS:
             raise ValueError(
                 f"unknown algorithm {algorithm!r}; one of "
@@ -75,6 +108,21 @@ class AnnEngine:
         self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
         self._dist_fn = resolve_dist_fn(cfg, dist_fn)
         self._search = _ALGORITHMS[algorithm]
+        if (algorithm == "bfis" and self.index is not None
+                and self.index.hnsw is not None):
+            # match AnnIndex.search: bfis on an hnsw-built index enters via
+            # the greedy upper-level descent, not from the base medoid
+            hnsw = self.index.hnsw
+
+            def _hnsw_bfis(g, q, c, dist_fn=None):
+                return hnsw_search_batch(hnsw._replace(base=g), q, c,
+                                         dist_fn=dist_fn)
+            self._search = _hnsw_bfis
+        # device-resident remap table, uploaded ONCE per engine (it enters
+        # every bucket's executable as a jit argument, like the graph)
+        self._ofn = (jnp.asarray(self._old_from_new, jnp.int32)
+                     if self._old_from_new is not None
+                     else jnp.zeros((0,), jnp.int32))
         self._jit_cache: Dict[int, object] = {}
         # serving counters
         self.queries_served = 0
@@ -102,16 +150,26 @@ class AnnEngine:
             # device-resident embedding table instead of baking its own copy
             search, cfg, dist_fn = self._search, self.cfg, self._dist_fn
             n_top, graph_cls = self.graph.n_top, type(self.graph)
+            normalize = self._normalize
+            has_remap = self._old_from_new is not None
+            n_nodes = self.graph.n_nodes
 
             @jax.jit
-            def jitted(nbrs, vectors, medoid, flat, q):
+            def jitted(nbrs, vectors, medoid, flat, ofn_arr, q):
                 g = graph_cls(nbrs=nbrs, vectors=vectors, medoid=medoid,
                               n_top=n_top, flat=flat)
-                return search(g, q, cfg, dist_fn=dist_fn)
+                q = q.astype(jnp.float32)
+                if normalize:
+                    q = normalize_queries(q)
+                ids, dists, stats = search(g, q, cfg, dist_fn=dist_fn)
+                if has_remap:
+                    ids = remap_result_ids(ids, ofn_arr, n_nodes)
+                return ids, dists, stats
 
             def fn(q, _j=jitted):
                 gr = self.graph
-                return _j(gr.nbrs, gr.vectors, gr.medoid, gr.flat, q)
+                return _j(gr.nbrs, gr.vectors, gr.medoid, gr.flat,
+                          self._ofn, q)
             self._jit_cache[bucket] = fn
         else:
             self.cache_hits += 1

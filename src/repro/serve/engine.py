@@ -6,8 +6,6 @@ decode loop runs on-device via ``lax.scan`` when generating many tokens
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,31 +9,39 @@ exp(-d(h, q)/τ) are interpolated with the LM softmax:
     p(w) = λ · p_knn(w) + (1 − λ) · p_lm(w)
 
 Building the datastore runs the model over a corpus and records
-(final-hidden-state, next-token) pairs; the index is a standard Speed-ANN
-NSG graph, so every optimization in core/ (staged parallel expansion,
-adaptive sync, walker sharding) accelerates kNN-LM serving directly.
+(final-hidden-state, next-token) pairs; the index is a standard
+``repro.ann.AnnIndex``, so every optimization in core/ (staged parallel
+expansion, adaptive sync, walker sharding) accelerates kNN-LM serving
+directly — and the retrieval metric is a build-time choice: ``"l2"``
+(Khandelwal et al.'s distance), ``"ip"``/``"cosine"`` for dot-product
+retrieval over hidden states (the natural metric when the LM head itself
+is an inner product).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ann import AnnIndex, IndexSpec, SearchParams
 from repro.config import SearchConfig
-from repro.core import build_nsg, search_speedann_batch
-from repro.core.graph import PaddedCSR
 
 
 class KNNLMDatastore(NamedTuple):
-    graph: PaddedCSR          # Speed-ANN index over hidden states
+    index: AnnIndex           # AnnIndex over hidden states
     values: jax.Array         # (N,) int32 next-token per datastore entry
     vocab_size: int
 
+    @property
+    def graph(self):
+        """The index's PaddedCSR (back-compat accessor)."""
+        return self.index.graph
+
 
 def build_datastore(model, params, token_batches, vocab_size: int,
-                    degree: int = 16) -> KNNLMDatastore:
+                    degree: int = 16, metric: str = "l2") -> KNNLMDatastore:
     """Run the model over batches, collect (hidden, next-token) pairs."""
     keys, vals = [], []
     hidden_fn = jax.jit(lambda p, t: _final_hidden(model, p, t))
@@ -44,9 +52,10 @@ def build_datastore(model, params, token_batches, vocab_size: int,
         vals.append(np.asarray(tokens[:, 1:].reshape(-1), np.int32))
     keys = np.concatenate(keys)
     vals = np.concatenate(vals)
-    graph = build_nsg(keys, degree=degree, knn_k=degree,
-                      ef_construction=2 * degree, passes=1)
-    return KNNLMDatastore(graph=graph, values=jnp.asarray(vals),
+    index = AnnIndex.build(keys, IndexSpec(
+        builder="nsg", metric=metric, degree=degree, knn_k=degree,
+        ef_construction=2 * degree, passes=1))
+    return KNNLMDatastore(index=index, values=jnp.asarray(vals),
                           vocab_size=vocab_size)
 
 
@@ -72,15 +81,18 @@ def _final_hidden(model, params, tokens):
 
 def knnlm_logits(
     ds: KNNLMDatastore, hidden: jax.Array, lm_logits: jax.Array,
-    cfg: SearchConfig, lam: float = 0.25, tau: float = 10.0,
+    cfg: Union[SearchConfig, SearchParams], lam: float = 0.25,
+    tau: float = 10.0,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Interpolate LM logits with Speed-ANN retrieval.
+    """Interpolate LM logits with Speed-ANN retrieval through the facade.
 
-    hidden (B, d); lm_logits (B, V).  Returns (mixed log-probs (B, V),
-    retrieved ids (B, k)).
+    hidden (B, d); lm_logits (B, V); ``cfg`` is a ``SearchParams`` (or a
+    legacy ``SearchConfig``, whose per-query fields are lifted onto one).
+    Returns (mixed log-probs (B, V), retrieved ids (B, k)).
     """
-    ids, dists, _ = search_speedann_batch(
-        ds.graph, hidden.astype(jnp.float32), cfg)
+    if isinstance(cfg, SearchConfig):
+        cfg = SearchParams.from_search_config(cfg)
+    ids, dists, _ = ds.index.search(hidden.astype(jnp.float32), cfg)
     n = ds.graph.n_nodes
     safe = jnp.minimum(ids, n - 1)
     toks = ds.values[safe]                               # (B, k)

@@ -23,7 +23,6 @@ import re
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis -> mesh axis (or tuple of mesh axes)

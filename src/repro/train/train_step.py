@@ -7,7 +7,6 @@ bandwidth-constrained cross-pod training.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -16,7 +15,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config import TrainConfig
 from repro.optim import (clip_by_global_norm, make_optimizer, apply_updates)
-from repro.optim.adamw import adamw_init
 from repro.optim.grad import compressed_psum
 
 

@@ -12,8 +12,7 @@ Responsibilities:
 from __future__ import annotations
 
 import logging
-import time
-from typing import Callable, Iterator, Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np

@@ -17,14 +17,14 @@ from repro.config import SearchConfig             # noqa: E402
 from repro.core import build_nsg, recall_at_k, search_speedann_batch  # noqa: E402
 from repro.core.distributed import (build_partitioned,                # noqa: E402
                                     corpus_sharded_search,
+                                    make_search_mesh,
                                     walker_sharded_search)
 from repro.data import make_vector_dataset        # noqa: E402
 
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_search_mesh((2, 4), ("data", "model"))
 
     ds = make_vector_dataset("sift", n=2000, n_queries=16, k=10, dim=24,
                              n_clusters=16, seed=1)
@@ -36,8 +36,7 @@ def main():
     q = jnp.asarray(ds.queries)
 
     # --- walker-sharded Speed-ANN over the model axis ---
-    with jax.set_mesh(mesh):
-        ids, dists, stats = walker_sharded_search(graph, q, cfg, mesh)
+    ids, dists, stats = walker_sharded_search(graph, q, cfg, mesh)
     ids = np.asarray(ids)
     r = recall_at_k(ids, ds.gt_ids, 10)
     assert r >= 0.9, f"walker-sharded recall {r}"
@@ -58,20 +57,17 @@ def main():
     # --- corpus-sharded search over the model axis ---
     idx = build_partitioned(ds.base, num_shards=4, degree=16, knn_k=16,
                             ef_construction=32, passes=1)
-    with jax.set_mesh(mesh):
-        gids, gd = corpus_sharded_search(
-            idx, q, cfg.with_(m_max=1, staged=False), mesh)
+    gids, gd = corpus_sharded_search(
+        idx, q, cfg.with_(m_max=1, staged=False), mesh)
     r2 = recall_at_k(np.asarray(gids), ds.gt_ids, 10)
     assert r2 >= 0.9, f"corpus-sharded recall {r2}"
     print(f"OK corpus_sharded recall={r2:.3f}")
 
     # --- multi-pod style 3D mesh lowers & runs: (pod, data, model) ---
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    with jax.set_mesh(mesh3):
-        ids3, _, _ = walker_sharded_search(
-            graph, q, cfg.with_(num_walkers=2), mesh3,
-            data_axis="data", walker_axis="model")
+    mesh3 = make_search_mesh((2, 2, 2), ("pod", "data", "model"))
+    ids3, _, _ = walker_sharded_search(
+        graph, q, cfg.with_(num_walkers=2), mesh3,
+        data_axis="data", walker_axis="model")
     r3 = recall_at_k(np.asarray(ids3), ds.gt_ids, 10)
     assert r3 >= 0.85, f"3D-mesh recall {r3}"
     print(f"OK mesh3d recall={r3:.3f}")

@@ -1,0 +1,218 @@
+"""AnnIndex facade lifecycle: build → save/load → search → serve.
+
+The acceptance bar for the unified API:
+  * ``save``/``load`` round-trips bit-identically — a loaded index returns
+    ids IDENTICAL to the pre-save index for every algorithm;
+  * every registered distance backend serves every metric (l2 | ip |
+    cosine) with recall@10 >= 0.9 against the metric-aware ``exact_knn``
+    and with cross-backend id parity;
+  * the serving engine inherits the index's metric handling;
+  * the §5.3 ablation variants are distinguishable configurations.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.ann import AnnIndex, IndexSpec, SearchParams
+from repro.config import SearchConfig
+from repro.core import recall_at_k, variant
+from repro.core.build import exact_knn
+from repro.data import make_vector_dataset
+from repro.kernels import available_backends
+
+METRICS = ("l2", "ip", "cosine")
+ALGOS = ("bfis", "topm", "speedann")
+
+PARAMS = SearchParams(k=10, queue_len=48, m_max=4, num_walkers=4,
+                      max_steps=192, local_steps=4)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("sift", n=1500, n_queries=12, k=10, dim=24,
+                               n_clusters=24, seed=3)
+
+
+@pytest.fixture(scope="module")
+def indices(ds):
+    return {m: AnnIndex.build(ds, IndexSpec(metric=m, degree=16, passes=1))
+            for m in METRICS}
+
+
+@pytest.fixture(scope="module")
+def gts(ds, indices):
+    return {m: indices[m].exact(ds.queries, 10)[0] for m in METRICS}
+
+
+# -- spec validation ---------------------------------------------------------
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown builder"):
+        IndexSpec(builder="faiss")
+    with pytest.raises(ValueError, match="unknown metric"):
+        IndexSpec(metric="hamming")
+    with pytest.raises(ValueError, match="nsg builder only"):
+        IndexSpec(builder="hnsw", n_top_fraction=0.1)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        SearchParams(algorithm="annoy")
+
+
+def test_params_split_from_search_config():
+    """SearchParams carries per-query knobs; the metric is index-owned."""
+    cfg = SearchConfig(k=7, queue_len=32, m_max=3, dist_backend="dma",
+                       metric="ip")
+    p = SearchParams.from_search_config(cfg, algorithm="topm")
+    assert (p.k, p.queue_len, p.m_max, p.backend) == (7, 32, 3, "dma")
+    assert "metric" not in {f.name for f in dataclasses.fields(p)}
+    # lowering re-attaches the metric from the index's spec
+    assert p.to_search_config("cosine").metric == "cosine"
+
+
+# -- metric-aware exact_knn --------------------------------------------------
+
+def test_exact_knn_metric_semantics(ds):
+    """ip = negative inner product; cosine = ip on normalized vectors."""
+    q = ds.queries[:4]
+    ids_ip, d_ip = exact_knn(ds.base, q, 5, metric="ip")
+    brute = -(q @ ds.base.T)
+    np.testing.assert_array_equal(ids_ip, np.argsort(brute, axis=1,
+                                                     kind="stable")[:, :5])
+    np.testing.assert_allclose(d_ip, np.sort(brute, axis=1)[:, :5],
+                               rtol=1e-5, atol=1e-5)
+    norm = lambda x: x / np.linalg.norm(x, axis=1, keepdims=True)  # noqa: E731
+    ids_cos, _ = exact_knn(ds.base, q, 5, metric="cosine")
+    ids_cos2, _ = exact_knn(norm(ds.base), norm(q), 5, metric="ip")
+    np.testing.assert_array_equal(ids_cos, ids_cos2)
+
+
+# -- recall + backend parity over the full metric matrix ---------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_recall_and_backend_parity(ds, indices, gts, metric):
+    """Every registered backend serves every metric: recall@10 >= 0.9
+    against metric-aware exact_knn, and all backends agree on result ids
+    (the Pallas kernels retrace the ref search)."""
+    index = indices[metric]
+    gt = gts[metric]
+    ids_by_backend = {}
+    for backend in ("ref",) + tuple(
+            b for b in available_backends() if b != "ref"):
+        res = index.search(ds.queries,
+                           PARAMS.with_(algorithm="speedann",
+                                        backend=backend))
+        ids = np.asarray(res.ids)
+        r = recall_at_k(ids, gt, 10)
+        assert r >= 0.9, f"{metric}/{backend} recall {r}"
+        ids_by_backend[backend] = ids
+    ref = ids_by_backend.pop("ref")
+    for backend, ids in ids_by_backend.items():
+        np.testing.assert_array_equal(
+            ids, ref, err_msg=f"{metric}/{backend} diverged from ref")
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_recall_every_algorithm(ds, indices, gts, metric, algo):
+    res = indices[metric].search(ds.queries, PARAMS.with_(algorithm=algo))
+    r = recall_at_k(np.asarray(res.ids), gts[metric], 10)
+    assert r >= 0.9, f"{metric}/{algo} recall {r}"
+
+
+# -- save/load round-trip ----------------------------------------------------
+
+@pytest.mark.parametrize("metric", ("l2", "cosine"))
+def test_save_load_ids_bit_identical(ds, indices, tmp_path, metric):
+    index = indices[metric]
+    path = index.save(str(tmp_path / f"idx_{metric}"))
+    assert path.endswith(".npz")
+    loaded = AnnIndex.load(path)
+    assert loaded.spec == index.spec
+    assert loaded.n_nodes == index.n_nodes and loaded.dim == index.dim
+    for algo in ALGOS:
+        p = PARAMS.with_(algorithm=algo)
+        before = np.asarray(index.search(ds.queries, p).ids)
+        after = np.asarray(loaded.search(ds.queries, p).ids)
+        np.testing.assert_array_equal(after, before,
+                                      err_msg=f"{metric}/{algo}")
+
+
+def test_save_load_grouped_index_remaps_ids(ds, tmp_path):
+    """Neighbor grouping relabels vertices internally; the facade maps ids
+    back to the caller's original space and persists the permutation."""
+    spec = IndexSpec(metric="l2", degree=16, passes=1, n_top_fraction=0.02)
+    index = AnnIndex.build(ds, spec)
+    assert index.graph.n_top == max(1, round(0.02 * ds.base.shape[0]))
+    gt, _ = index.exact(ds.queries, 10)
+    res = index.search(ds.queries, PARAMS.with_(algorithm="topm"))
+    ids = np.asarray(res.ids)
+    assert recall_at_k(ids, gt, 10) >= 0.9
+    # returned ids live in the ORIGINAL id space: distances must match the
+    # original vectors exactly
+    d = np.asarray(res.dists)
+    b, j = 0, 0
+    exact = ((ds.base[ids[b, j]] - ds.queries[b]) ** 2).sum()
+    assert abs(float(d[b, j]) - float(exact)) < 1e-2 * max(exact, 1.0)
+    loaded = AnnIndex.load(index.save(str(tmp_path / "grouped")))
+    after = np.asarray(loaded.search(ds.queries,
+                                     PARAMS.with_(algorithm="topm")).ids)
+    np.testing.assert_array_equal(after, ids)
+
+
+@pytest.fixture(scope="module")
+def hnsw_idx(ds):
+    return AnnIndex.build(ds, IndexSpec(builder="hnsw", degree=16))
+
+
+def test_save_load_hnsw(ds, hnsw_idx, tmp_path):
+    gt, _ = hnsw_idx.exact(ds.queries, 10)
+    p = PARAMS.with_(algorithm="bfis", max_steps=256)
+    before = np.asarray(hnsw_idx.search(ds.queries, p).ids)
+    assert recall_at_k(before, gt, 10) >= 0.9
+    loaded = AnnIndex.load(hnsw_idx.save(str(tmp_path / "hnsw")))
+    assert loaded.hnsw is not None
+    assert len(loaded.hnsw.level_nbrs) == len(hnsw_idx.hnsw.level_nbrs)
+    after = np.asarray(loaded.search(ds.queries, p).ids)
+    np.testing.assert_array_equal(after, before)
+
+
+# -- serving through the facade ----------------------------------------------
+
+def test_serve_hnsw_routes_through_descent(ds, hnsw_idx):
+    """serve() on an hnsw index runs the same algorithm as search(): bfis
+    entered via the greedy upper-level descent, not from the base medoid."""
+    p = PARAMS.with_(algorithm="bfis", max_steps=256)
+    engine = hnsw_idx.serve(p, bucket_sizes=(4, 8))
+    res = engine.search(ds.queries[:4])
+    direct = hnsw_idx.search(ds.queries[:4], p)
+    np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
+
+
+def test_serve_rejects_sharded_with_clear_error(indices):
+    with pytest.raises(ValueError, match="shard_map walker path"):
+        indices["l2"].serve(PARAMS.with_(algorithm="sharded"))
+
+
+def test_serve_inherits_metric(ds, indices, gts):
+    """index.serve() returns an engine whose results match direct facade
+    search bit for bit (cosine: query normalization happens in the engine)."""
+    index = indices["cosine"]
+    engine = index.serve(PARAMS, bucket_sizes=(1, 4, 8))
+    res = engine.search(ds.queries[:6], gt_ids=gts["cosine"][:6])
+    direct = index.search(ds.queries[:6], PARAMS)
+    np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
+    assert engine.metrics()["recall_at_k"] >= 0.9
+
+
+# -- §5.3 ablation variants --------------------------------------------------
+
+def test_edge_parallel_variant_keeps_walker_pool():
+    """edge_parallel models NSG-32T (M=1, many walkers); it must differ
+    from the bfis variant, which collapses to one sequential walker."""
+    cfg = SearchConfig(m_max=8, num_walkers=8, staged=True)
+    ep = variant(cfg, "edge_parallel")
+    bf = variant(cfg, "bfis")
+    assert ep.m_max == 1 and not ep.staged
+    assert ep.num_walkers == cfg.num_walkers
+    assert bf.num_walkers == 1
+    assert ep != bf

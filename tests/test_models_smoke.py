@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import FAMILY_ENCDEC, FAMILY_HYBRID, FAMILY_SSM
+from repro.config import FAMILY_ENCDEC
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import build_model
 

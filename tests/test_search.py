@@ -6,9 +6,7 @@ Validates the paper's core claims at test scale:
   * staged search cuts distance computations vs fixed-M (Fig. 8);
   * adaptive sync computes less than no-sync (Table 2).
 """
-import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Sharding rules, cell matrix, roofline parsing, HLO profiling units."""
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
@@ -9,8 +8,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import cell_matrix, runnable_cells
 from repro.launch.roofline import (collective_bytes, model_flops,
                                    roofline_terms, _shape_bytes)
-from repro.sharding import ACT_RULES, DEFAULT_RULES, resolve_spec, \
-    spec_for_path
+from repro.sharding import DEFAULT_RULES, resolve_spec, spec_for_path
 
 
 @pytest.fixture(scope="module")

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import SearchConfig, TrainConfig
+from repro.config import SearchConfig
 from repro.core import build_nsg, recall_at_k, search_speedann_batch
 from repro.core.build import exact_knn
 from repro.data import make_vector_dataset

@@ -1,11 +1,9 @@
 """Training substrate: optimizer behaviour, loss goes down, microbatch
 equivalence, checkpoint round-trip, fault recovery, schedules."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import TrainConfig
 from repro.configs import get_smoke_config
