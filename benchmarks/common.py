@@ -32,12 +32,12 @@ def dataset(name="sift", n=8000, q=64, dim=32, seed=0):
     return _CACHE[key]
 
 
-def nsg_index(ds, degree=24, metric="l2") -> AnnIndex:
-    key = ("nsg", id(ds), degree, metric)
+def nsg_index(ds, degree=24, metric="l2", quant="none") -> AnnIndex:
+    key = ("nsg", id(ds), degree, metric, str(quant))
     if key not in _CACHE:
         _CACHE[key] = AnnIndex.build(ds, IndexSpec(
             builder="nsg", metric=metric, degree=degree, knn_k=degree,
-            ef_construction=2 * degree, passes=2))
+            ef_construction=2 * degree, passes=2, quant=quant))
     return _CACHE[key]
 
 

@@ -1,16 +1,20 @@
-"""Distance-backend sweep: ref vs rowgather vs dma in the real search loop.
+"""Distance-backend sweep: fp32 vs quantized backends in the real search loop.
 
 ``PYTHONPATH=src python -m benchmarks.run --sweep-backends``
 
 Runs the same top-M search (and the full Speed-ANN searcher) through the
-``AnnIndex`` facade with every registered distance backend and records
-per-backend wall time, recall, and parity against the ``ref`` backend into
-``BENCH_dist_backend.json``.  The file is a TRAJECTORY: each sweep APPENDS
-its rows, replacing only rows with the same (searcher, backend, host,
-interpret) key — so this container's interpret-mode numbers and future
-Mosaic/TPU numbers from other hosts accumulate side by side instead of
-overwriting each other.  On this CPU container the Pallas backends run in
-interpret mode, so absolute times measure the emulation, not Mosaic.
+``AnnIndex`` facade with every registered distance backend — the fp32 ones
+(ref | rowgather | dma) on a fp32 index and the quantized ones (ref_int8 |
+rowgather_int8 | ref_bf16) on int8/bf16 indices with the two-stage exact
+re-rank enabled — and records per-backend wall time, recall, and parity
+against the ``ref`` backend into ``BENCH_dist_backend.json``.  Every row
+carries a ``quant`` key so the trajectory tracks fp32 vs int8/bf16 on the
+same host.  The file is a TRAJECTORY: each sweep APPENDS its rows, replacing
+only rows with the same (searcher, backend, host, interpret) key — so this
+container's interpret-mode numbers and future Mosaic/TPU numbers from other
+hosts accumulate side by side instead of overwriting each other.  On this
+CPU container the Pallas backends run in interpret mode, so absolute times
+measure the emulation, not Mosaic.
 """
 from __future__ import annotations
 
@@ -29,10 +33,15 @@ from repro.ann import SearchParams
 from repro.core import recall_at_k
 from repro.kernels import available_backends
 from repro.kernels import ops as kops
+from repro.quant.scheme import required_quant_dtype
 
 K = 10
 BASE = SearchParams(k=K, queue_len=64, m_max=6, num_walkers=4,
                     max_steps=256, local_steps=4, sync_ratio=0.8)
+# quantized rows run the full AQR-HNSW two-stage shape: quantized traversal
+# over a pool widened to RERANK_K, then exact f32 re-ranking — that is the
+# configuration whose recall is comparable to the fp32 rows
+RERANK_K = 2 * K
 
 
 def _row_key(row: Dict) -> tuple:
@@ -73,19 +82,24 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
           q: int = 16) -> Dict:
     """One row per (searcher, backend); appends to the JSON trajectory."""
     ds = dataset(n=n, q=q)
-    idx = nsg_index(ds, degree=16)
     queries = jnp.asarray(ds.queries)
     host = platform.node() or platform.machine()
 
     rows = []
     ref_ids: Dict[str, np.ndarray] = {}
-    # ref first: it is the parity baseline for the other rows
+    # ref first: it is the parity baseline for the other rows.  Each backend
+    # runs on the index whose storage it reads (fp32 | int8 | bf16); the
+    # graphs are built with identical parameters, only the table differs.
     backends = ("ref",) + tuple(
         b for b in available_backends() if b != "ref")
+    indices = {quant: nsg_index(ds, degree=16, quant=quant)
+               for quant in {required_quant_dtype(b) for b in backends}}
     for searcher in ("topm", "speedann"):
         for backend in backends:
-            fn = idx.searcher(BASE.with_(algorithm=searcher,
-                                         backend=backend))
+            quant = required_quant_dtype(backend)
+            rerank_k = RERANK_K if quant != "none" else 0
+            fn = indices[quant].searcher(BASE.with_(
+                algorithm=searcher, backend=backend, rerank_k=rerank_k))
             ids, _, stats = fn(queries)
             us = time_batched(fn, queries)
             ids = np.asarray(ids)
@@ -94,6 +108,8 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
             row = {
                 "searcher": searcher,
                 "backend": backend,
+                "quant": quant,
+                "rerank_k": rerank_k,
                 "host": host,
                 "interpret": bool(kops.INTERPRET),
                 # dataset scale rides on every row: rows from sweeps with
@@ -112,6 +128,7 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
             print(f"bench_backend_{searcher}_{backend},"
                   f"{row['us_per_query']:.1f},"
                   f"recall={row['recall_at_k']:.3f};"
+                  f"quant={quant};"
                   f"ids_match_ref={row['ids_match_ref']}")
 
     all_rows = _merge_rows(out_path, rows)

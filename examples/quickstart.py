@@ -2,7 +2,8 @@
 
 One facade covers the whole paper stack: metric-general index construction
 (l2 | ip | cosine), npz persistence, every search algorithm (BFiS, top-M,
-Speed-ANN, sharded walkers), every distance-kernel backend, and batched
+Speed-ANN, sharded walkers), every distance-kernel backend — including the
+int8/bf16 quantized ones with two-stage exact re-ranking — and batched
 serving.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -53,6 +54,24 @@ def main():
                                  algorithm="speedann", backend="rowgather"))
     r = recall_at_k(np.asarray(ids), gt, 10)
     print(f"speedann (Pallas rowgather kernel, interpret) recall@10={r:.3f}")
+
+    # -- quantized storage + two-stage search -------------------------------
+    # int8 codes shrink the gather-side payload 4x; the two-stage search
+    # (quantized traversal, exact f32 re-rank of the top rerank_k) recovers
+    # fp32 recall.  Backend + quant are pure config — no algorithm changes.
+    q8 = AnnIndex.build(ds, IndexSpec(builder="nsg", metric="l2", degree=24,
+                                      quant="int8"))
+    q8_path = q8.save(os.path.join(tempfile.mkdtemp(), "sift_int8.npz"))
+    q8 = AnnIndex.load(q8_path)          # codes + scales round-trip
+    ids, _, _ = q8.search(
+        ds.queries, SearchParams(k=10, queue_len=64, m_max=8, num_walkers=8,
+                                 max_steps=256, local_steps=8,
+                                 algorithm="speedann", backend="ref_int8",
+                                 rerank_k=30))
+    r = recall_at_k(np.asarray(ids), gt, 10)
+    print(f"int8 two-stage (ref_int8 + rerank_k=30) recall@10={r:.3f}  "
+          f"[codes table {np.asarray(q8.graph.codes).nbytes} B vs f32 "
+          f"{np.asarray(q8.graph.vectors).nbytes} B]")
 
     # -- metric choice: cosine retrieval over the same raw vectors ----------
     cos = AnnIndex.build(ds, IndexSpec(metric="cosine", degree=24))

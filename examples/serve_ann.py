@@ -9,8 +9,13 @@ bounded budgets) runs underneath with the distance backend picked by
 ``--dist-backend``.
 
     PYTHONPATH=src python examples/serve_ann.py [--batches 20] \
-        [--max-batch 32] [--dist-backend ref|rowgather|dma] \
-        [--metric l2|ip|cosine]
+        [--max-batch 32] [--dist-backend ref|rowgather|dma|ref_int8|...] \
+        [--metric l2|ip|cosine] [--quant none|int8|bf16] [--rerank-k 30]
+
+``--quant int8 --dist-backend ref_int8 --rerank-k 30`` serves the two-stage
+quantized configuration: int8 traversal, exact f32 re-ranking — the engine
+inherits it all from the facade, and ``engine.stats()`` shows where the
+tail latency lands.
 """
 import argparse
 
@@ -33,19 +38,27 @@ def main():
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--recall-target", type=float, default=0.9)
     ap.add_argument("--dist-backend", default="ref",
-                    choices=("ref", "rowgather", "dma"))
+                    choices=("ref", "rowgather", "dma", "ref_int8",
+                             "rowgather_int8", "ref_bf16"))
     ap.add_argument("--metric", default="l2",
                     choices=("l2", "ip", "cosine"))
+    ap.add_argument("--quant", default="none",
+                    choices=("none", "int8", "bf16"))
+    ap.add_argument("--rerank-k", type=int, default=0,
+                    help="two-stage search: exact f32 re-rank of this many "
+                         "stage-1 candidates (0 disables)")
     args = ap.parse_args()
 
     print("== Speed-ANN serving driver ==")
     ds = make_vector_dataset("deep", n=args.n, n_queries=args.max_batch,
                              k=10, dim=48)
     index = AnnIndex.build(ds, IndexSpec(
-        builder="nsg", metric=args.metric, degree=32, ef_construction=96))
+        builder="nsg", metric=args.metric, degree=32, ef_construction=96,
+        quant=args.quant))
     params = SearchParams(k=10, queue_len=128, m_max=8, num_walkers=8,
                           max_steps=512, local_steps=8, sync_ratio=0.8,
-                          backend=args.dist_backend)
+                          backend=args.dist_backend,
+                          rerank_k=args.rerank_k)
 
     buckets = tuple(b for b in (1, 2, 4, 8, 16, 32, 64, 128)
                     if b <= args.max_batch)
@@ -70,12 +83,13 @@ def main():
               f"{res.latency_ms:7.1f} ms ({res.latency_ms / bsz:6.2f} "
               f"ms/query)")
 
-    m = engine.metrics()
+    m = engine.stats()
     print(f"\nserved {m['queries_served']:.0f} queries in "
           f"{m['requests_served']:.0f} requests | "
           f"recall@10={m['recall_at_k']:.3f} | "
           f"mean={m['latency_mean_ms']:.1f}ms "
-          f"p90={m['latency_p90_ms']:.1f}ms p99={m['latency_p99_ms']:.1f}ms"
+          f"p50={m['latency_p50_ms']:.1f}ms p95={m['latency_p95_ms']:.1f}ms "
+          f"p99={m['latency_p99_ms']:.1f}ms"
           f" | jit entries={m['jit_cache_size']:.0f} "
           f"(hits={m['cache_hits']:.0f} misses={m['cache_misses']:.0f}) "
           f"padded={m['padded_queries']:.0f}")

@@ -18,6 +18,19 @@ distance backend serves every metric in {l2, ip, cosine}: metric handling
 (query normalization for cosine, negative-inner-product kernels for ip) and
 neighbor-grouping id remapping live HERE, so callers never hand-wire
 ``PaddedCSR`` + ``SearchConfig`` + ``resolve_dist_fn`` again.
+
+Quantized storage (``repro.quant``) threads through the same lifecycle:
+``IndexSpec(quant="int8"|"bf16")`` trains scales at build time and attaches
+a codes table the quantized distance backends (``ref_int8`` |
+``rowgather_int8`` | ``ref_bf16``) gather from, ``save``/``load`` round-trip
+codes + scales, and ``SearchParams(rerank_k=...)`` turns any search into the
+AQR-HNSW two-stage shape — quantized traversal over a widened pool, then
+exact float32 re-ranking::
+
+    spec = IndexSpec(metric="l2", quant="int8")
+    index = AnnIndex.build(dataset, spec)
+    res = index.search(queries, SearchParams(k=10, backend="ref_int8",
+                                             rerank_k=30))
 """
 from __future__ import annotations
 
@@ -36,8 +49,13 @@ from repro.core.build import (HNSWIndex, build_hnsw, build_nsg, exact_knn,
                               normalize_rows)
 from repro.core.graph import PaddedCSR, group_by_indegree
 from repro.core.speedann import search_speedann_batch
+from repro.quant import codec as quant_codec
+from repro.quant.scheme import required_quant_dtype
 
-_SAVE_FORMAT = 1
+# format 2 adds quantized storage: codes + scales arrays, and indices whose
+# f32 vectors are not persisted (QuantSpec.keep_float=False) — readable only
+# by code that knows to dequantize.  Format-1 files load unchanged.
+_SAVE_FORMAT = 2
 
 
 class SearchResult(NamedTuple):
@@ -68,6 +86,57 @@ def remap_result_ids(ids: jax.Array, old_from_new: jax.Array,
     space; sentinel/invalid ids (>= n_nodes) pass through unchanged."""
     safe = jnp.minimum(ids, n_nodes - 1)
     return jnp.where(ids < n_nodes, old_from_new[safe], ids)
+
+
+def exact_rerank(graph: PaddedCSR, q: jax.Array, ids: jax.Array, k: int,
+                 metric: str):
+    """Second stage of the two-stage search: exactly re-rank a (B, P)
+    candidate pool against the float32 vectors and return the top k.
+
+    Runs in INTERNAL (pre-remap) id space so the vector gather is direct;
+    sentinel ids (>= N) re-rank to +inf and sink to the tail.  Ties break on
+    id, so the result order is deterministic across backends.
+    """
+    n = graph.n_nodes
+    safe = jnp.minimum(ids, n - 1)
+    vecs = graph.vectors[safe].astype(jnp.float32)        # (B, P, d)
+    qf = q.astype(jnp.float32)[:, None, :]
+    if metric in ("ip", "cosine"):
+        d = -jnp.sum(vecs * qf, axis=-1)
+    else:
+        d = jnp.sum((vecs - qf) ** 2, axis=-1)
+    d = jnp.where(ids < n, d, jnp.inf)
+    d, ids = jax.lax.sort((d, ids.astype(jnp.int32)), num_keys=2,
+                          is_stable=True, dimension=-1)
+    return ids[:, :k], d[:, :k]
+
+
+def quantize_graph(graph: PaddedCSR, quant) -> PaddedCSR:
+    """Attach a trained quantized table (codes + scales) to a built graph.
+
+    Scales are calibrated on the STORED vectors — post-normalization (cosine)
+    and post-relabelling (neighbor grouping) — so ``codes[i]`` always encodes
+    ``vectors[i]``.
+
+    With ``keep_float=False`` the exact f32 table is dropped HERE, already at
+    build time: ``vectors`` (and the flattened hot-vertex blocks) become the
+    dequantized codes, so an in-memory index and its save/load round-trip are
+    bit-identical — persistence never changes search results."""
+    if not quant.enabled:
+        return graph
+    scales = quant_codec.fit_scales(graph.vectors, quant)
+    codes = quant_codec.quantize(graph.vectors, quant, scales)
+    graph = graph._replace(codes=codes,
+                           scales=jnp.asarray(scales, jnp.float32))
+    if not quant.keep_float:
+        vectors = quant_codec.dequantize(codes, quant, graph.scales)
+        flat = graph.flat
+        if graph.n_top > 0:
+            from repro.core.graph import _flatten_top
+            flat = jnp.asarray(_flatten_top(
+                np.asarray(graph.nbrs), np.asarray(vectors), graph.n_top))
+        graph = graph._replace(vectors=vectors, flat=flat)
+    return graph
 
 
 class AnnIndex:
@@ -143,7 +212,8 @@ class AnnIndex:
                               upper_degree=spec.upper_degree,
                               seed=spec.seed, alpha=spec.alpha,
                               metric=build_metric)
-            return cls(spec, hnsw.base, hnsw=hnsw)
+            base = quantize_graph(hnsw.base, spec.quant)
+            return cls(spec, base, hnsw=hnsw._replace(base=base))
 
         graph = build_nsg(data, degree=spec.degree,
                           knn_k=spec.resolved_knn_k, alpha=spec.alpha,
@@ -155,26 +225,48 @@ class AnnIndex:
                 np.asarray(graph.nbrs), np.asarray(graph.vectors),
                 medoid=int(graph.medoid),
                 top_fraction=spec.n_top_fraction)
-        return cls(spec, graph, old_from_new=old_from_new)
+        return cls(spec, quantize_graph(graph, spec.quant),
+                   old_from_new=old_from_new)
 
     # -- persistence -------------------------------------------------------
 
     def save(self, path: str) -> str:
         """npz round-trip of CSR + flat layout + medoid + spec (+ HNSW
-        levels + grouping permutation).  Returns the actual path written
-        (numpy appends ``.npz`` when missing)."""
+        levels + grouping permutation + quantized codes/scales).  Returns
+        the actual path written (numpy appends ``.npz`` when missing).
+
+        With quantization and ``keep_float=False`` the float32 vectors are
+        NOT persisted — the vector payload shrinks 4x (int8) / 2x (bf16) and
+        ``load`` rebuilds the f32 table by dequantizing, so exact() and
+        re-ranking then reference the quantized values."""
         path = str(path)
         if not path.endswith(".npz"):
             path += ".npz"
+        quant = self.spec.quant
+        # unquantized artifacts stay format-1 artifacts END TO END: the
+        # format-1 stamp AND a spec json without the (default) quant key,
+        # so readers that predate quantization load them unchanged
+        fmt = _SAVE_FORMAT if self.graph.codes is not None else 1
+        spec_dict = dataclasses.asdict(self.spec)
+        if not quant.enabled:
+            del spec_dict["quant"]
         arrays = dict(
-            format=np.int64(_SAVE_FORMAT),
-            spec=np.asarray(json.dumps(dataclasses.asdict(self.spec))),
+            format=np.int64(fmt),
+            spec=np.asarray(json.dumps(spec_dict)),
             nbrs=np.asarray(self.graph.nbrs),
-            vectors=np.asarray(self.graph.vectors),
             medoid=np.asarray(self.graph.medoid, np.int32),
             n_top=np.int64(self.graph.n_top),
             flat=np.asarray(self.graph.flat),
         )
+        if not quant.enabled or quant.keep_float:
+            arrays["vectors"] = np.asarray(self.graph.vectors)
+        if self.graph.codes is not None:
+            codes = np.asarray(self.graph.codes)
+            if quant.dtype == "bf16":
+                # npz has no bfloat16 descr; persist the raw bit pattern
+                codes = codes.view(np.uint16)
+            arrays["codes"] = codes
+            arrays["scales"] = np.asarray(self.graph.scales, np.float32)
         if self.old_from_new is not None:
             arrays["old_from_new"] = self.old_from_new
         if self.hnsw is not None:
@@ -198,12 +290,28 @@ class AnnIndex:
             raise ValueError(f"index file format {fmt} is newer than this "
                              f"code ({_SAVE_FORMAT})")
         spec = IndexSpec(**json.loads(str(z["spec"])))
+        codes = scales = None
+        if "codes" in z.files:
+            raw = z["codes"]
+            if spec.quant.dtype == "bf16":
+                import ml_dtypes
+                raw = raw.view(ml_dtypes.bfloat16)
+            codes = jnp.asarray(raw)
+            scales = jnp.asarray(z["scales"], jnp.float32)
+        if "vectors" in z.files:
+            vectors = jnp.asarray(z["vectors"])
+        else:
+            # keep_float=False artifact: the f32 table is the dequantized
+            # codes (exact() / re-ranking reference the quantized values)
+            vectors = quant_codec.dequantize(codes, spec.quant, scales)
         graph = PaddedCSR(
             nbrs=jnp.asarray(z["nbrs"]),
-            vectors=jnp.asarray(z["vectors"]),
+            vectors=vectors,
             medoid=jnp.asarray(z["medoid"], jnp.int32),
             n_top=int(z["n_top"]),
             flat=jnp.asarray(z["flat"]),
+            codes=codes,
+            scales=scales,
         )
         old_from_new = (np.asarray(z["old_from_new"])
                         if "old_from_new" in z.files else None)
@@ -238,8 +346,22 @@ class AnnIndex:
         if cached is not None:
             return cached
 
+        need = required_quant_dtype(params.backend)
+        if need != "none" and self.spec.quant.dtype != need:
+            raise ValueError(
+                f"backend {params.backend!r} reads a {need} codes table; "
+                f"this index has quant={self.spec.quant.dtype!r} — rebuild "
+                f"with IndexSpec(quant={need!r}) or pick a matching backend")
+
         cfg = params.to_search_config(self.spec.metric)
-        normalize = self.spec.metric == "cosine"
+        metric = self.spec.metric
+        k, rerank_k = params.k, params.rerank_k
+        if rerank_k > 0:
+            # stage 1 traverses over a pool widened to max(k, rerank_k);
+            # stage 2 re-ranks that pool exactly against the f32 vectors
+            pool = max(k, rerank_k)
+            cfg = cfg.with_(k=pool, queue_len=max(cfg.queue_len, pool))
+        normalize = metric == "cosine"
         has_remap = self.old_from_new is not None
         ofn = self._ofn
         n_top, n_nodes = self.graph.n_top, self.graph.n_nodes
@@ -247,6 +369,12 @@ class AnnIndex:
         hnsw = self.hnsw
 
         if algorithm == "sharded":
+            if need != "none":
+                raise ValueError(
+                    "quantized backends are not wired into the sharded "
+                    "walker path; use a single-host algorithm "
+                    "(bfis | topm | speedann) with backend "
+                    f"{params.backend!r}")
             from repro.core.distributed import walker_sharded_search
             the_mesh = mesh if mesh is not None else default_search_mesh()
 
@@ -271,13 +399,18 @@ class AnnIndex:
             raise ValueError(algorithm)
 
         @jax.jit
-        def jitted(nbrs, vectors, medoid, flat, ofn_arr, q):
+        def jitted(nbrs, vectors, medoid, flat, codes, scales, ofn_arr, q):
             g = PaddedCSR(nbrs=nbrs, vectors=vectors, medoid=medoid,
-                          n_top=n_top, flat=flat)
+                          n_top=n_top, flat=flat, codes=codes, scales=scales)
             q = q.astype(jnp.float32)
             if normalize:
                 q = normalize_queries(q)
             ids, dists, stats = run(g, q)
+            if rerank_k > 0:
+                # the AQR-HNSW two-stage shape: quantized (or plain) best-
+                # first traversal, then exact f32 re-ranking of the pool —
+                # in internal id space, BEFORE the grouping remap
+                ids, dists = exact_rerank(g, q, ids, k, metric)
             if has_remap:
                 ids = remap_result_ids(ids, ofn_arr, n_nodes)
             return ids, dists, stats
@@ -289,7 +422,7 @@ class AnnIndex:
             if q.ndim != 2:
                 raise ValueError(f"queries must be (B, d), got {q.shape}")
             out = jitted(graph.nbrs, graph.vectors, graph.medoid,
-                         graph.flat, ofn, q)
+                         graph.flat, graph.codes, graph.scales, ofn, q)
             return SearchResult(*out)
 
         self._searcher_cache[key] = fn

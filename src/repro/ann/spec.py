@@ -23,6 +23,7 @@ import dataclasses
 from dataclasses import dataclass
 
 from repro.config import SearchConfig
+from repro.quant.scheme import QuantSpec, coerce_quant
 
 BUILDERS = ("nsg", "hnsw")
 METRICS = ("l2", "ip", "cosine")
@@ -46,8 +47,13 @@ class IndexSpec:
     #                              to original ids transparently)
     upper_degree: int = 16       # HNSW upper-level out-degree
     seed: int = 0
+    quant: QuantSpec = QuantSpec()  # stored-vector quantization
+    #                              (repro.quant): "int8" | "bf16" | "none",
+    #                              accepted as a dtype string, QuantSpec, or
+    #                              the json-round-tripped dict
 
     def __post_init__(self):
+        object.__setattr__(self, "quant", coerce_quant(self.quant))
         if self.builder not in BUILDERS:
             raise ValueError(
                 f"unknown builder {self.builder!r}; one of {BUILDERS}")
@@ -90,11 +96,24 @@ class SearchParams:
     visited_mode: str = "bitmap"  # "bitmap" | "loose" | "hash"
     hash_bits: int = 14
     global_rounds: int = 12      # static round budget ("sharded" algorithm)
+    rerank_k: int = 0            # two-stage search: traverse with the
+    #                              configured backend over a pool widened to
+    #                              max(k, rerank_k), then exactly re-rank the
+    #                              pool against the f32 vectors and return
+    #                              the top k.  0 disables the second stage.
+    #                              The recall recovery knob for quantized
+    #                              backends (AQR-HNSW shape).  queue_len is
+    #                              only raised to FIT the pool; it remains
+    #                              the traversal-depth knob — quantized
+    #                              stages on hard (clustered, normalized)
+    #                              data want it wider than the fp32 run.
 
     def __post_init__(self):
         if self.algorithm not in ALGORITHMS:
             raise ValueError(
                 f"unknown algorithm {self.algorithm!r}; one of {ALGORITHMS}")
+        if self.rerank_k < 0:
+            raise ValueError("rerank_k must be >= 0")
 
     def with_(self, **kw) -> "SearchParams":
         return dataclasses.replace(self, **kw)

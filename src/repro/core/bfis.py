@@ -29,7 +29,12 @@ from repro.core.graph import (PaddedCSR, fetch_neighbor_vectors,
                               gather_neighbor_ids)
 from repro.core.metrics import SearchStats
 
-# dist_fn(graph, active_ids (M,), nbr_ids (M,R), query (d,)) -> (M,R) sq-L2
+# dist_fn(graph, active_ids (M,), nbr_ids (M,R), query (d,)) -> (M,R)
+# distances, float32, smaller = closer, +inf for padded ids.  The query is
+# float32; WHICH stored table a backend reads (f32 ``graph.vectors``, int8
+# ``graph.codes`` + ``graph.scales``, bf16 codes) and in what precision it
+# accumulates is the backend's own business — the search algorithms only see
+# the f32 result, so quantized and exact backends are interchangeable here.
 DistFn = Callable[[PaddedCSR, jax.Array, jax.Array, jax.Array], jax.Array]
 
 
@@ -104,7 +109,11 @@ def expand(
     flat = nbrs.reshape(-1)
     valid = (flat < graph.n_nodes) & jnp.repeat(active_valid, graph.degree)
     visited, fresh = vs.check_and_insert(visited, flat, valid)
-    dists = dist_fn(graph, active_ids, nbrs, q).reshape(-1)
+    # the frontier stores f32 keys; normalize here so a backend that reduces
+    # in another precision (int32-accumulated int8, bf16) can't leak its
+    # accumulator dtype into the queue
+    dists = dist_fn(graph, active_ids, nbrs, q).astype(
+        jnp.float32).reshape(-1)
     dists = jnp.where(fresh, dists, jnp.inf)
     cand_ids = jnp.where(fresh, flat, fq.INVALID_ID)
     frontier, up_pos, _ = fq.insert(frontier, cand_ids, dists)

@@ -31,6 +31,12 @@ class PaddedCSR(NamedTuple):
     # two-level neighbor grouping (optional; zero-size when disabled)
     n_top: int             # static: number of top-level (flattened) vertices
     flat: jax.Array        # (n_top, R, d) flattened neighbor embeddings
+    # quantized storage (repro.quant; None when the index is not quantized).
+    # The quantized distance backends (ref_int8 | rowgather_int8 | ref_bf16)
+    # gather from ``codes`` so the hot-path payload is 4x/2x smaller; the
+    # f32 ``vectors`` stay the seeding + exact-re-ranking table.
+    codes: Optional[jax.Array] = None    # (N, d) int8 | bfloat16
+    scales: Optional[jax.Array] = None   # (N, 1) per-vector | (1, d) per-dim
 
     @property
     def n_nodes(self) -> int:

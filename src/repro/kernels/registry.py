@@ -17,6 +17,12 @@ Built-in backends:
   are padded to the ``cfg.dma_group`` tile (padding ids map to +inf and are
   sliced off, so ragged M·R shapes are transparent to callers).
 
+Quantized backends (``ref_int8`` | ``rowgather_int8`` | ``ref_bf16``, from
+``repro.quant.kernels``) gather from the index's int8/bf16 codes table
+instead of the f32 vectors; they require an index built with
+``IndexSpec(quant=...)`` and compose with the two-stage re-ranked search
+(``SearchParams.rerank_k``).
+
 New kernels register with :func:`register_backend` and become selectable via
 ``SearchConfig(dist_backend=...)`` without touching any search algorithm.
 """
@@ -120,3 +126,10 @@ def _rowgather_backend(cfg):
 def _dma_backend(cfg):
     return make_dist_fn("dma", metric=_cfg_metric(cfg),
                         dma_group=int(getattr(cfg, "dma_group", 8)))
+
+
+# the quantized backends live next to their codec in repro.quant.kernels and
+# self-register on import; importing them HERE (not from repro.quant's
+# __init__) keeps the quant package importable without this module and this
+# module the single place the backend catalogue is assembled
+import repro.quant.kernels as _quant_kernels  # noqa: E402,F401

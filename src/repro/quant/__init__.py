@@ -1,0 +1,11 @@
+# Quantized vector storage: QuantSpec schemes (int8 | bf16), the jit-friendly
+# codec, and quantized distance backends.  The backends in
+# repro.quant.kernels self-register with repro.kernels.registry (imported
+# from the registry module, NOT here, to keep the import graph acyclic) and
+# are selected purely via SearchParams.backend on an index built with
+# IndexSpec(quant=...).
+from repro.quant.codec import (dequantize, fit_scales,  # noqa: F401
+                               max_error_bound, no_scales, quantize,
+                               quantize_query)
+from repro.quant.scheme import (QUANT_DTYPES, QuantSpec,  # noqa: F401
+                                coerce_quant, required_quant_dtype)

@@ -1,0 +1,114 @@
+"""jit-friendly quantize / dequantize for stored vectors.
+
+The codec is pure shape-static ``jnp`` so it can run inside jitted build /
+search code or on host arrays interchangeably.  Conventions:
+
+* int8 is SYMMETRIC around zero with 127 levels per side: ``code =
+  round(x / s)`` with ``s = max|x| / 127`` over the scale group, so no value
+  clips and the reconstruction error is bounded by ``s / 2`` elementwise
+  (the bound the hypothesis property test asserts);
+* scales are float32 with broadcast-ready shapes — ``(N, 1)`` per-vector,
+  ``(1, d)`` per-dimension — and a zero-size ``(0, 0)`` placeholder when the
+  scheme has no scales (bf16 / none), so pytrees stay uniform;
+* bf16 is scale-free storage rounding (``x.astype(bfloat16)``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.scheme import QuantSpec
+
+INT8_LEVELS = 127.0          # symmetric: codes in [-127, 127]
+_EPS = 1e-12                 # all-zero scale groups quantize to code 0
+
+
+def no_scales() -> jax.Array:
+    """The zero-size scales placeholder for scale-free schemes."""
+    return jnp.zeros((0, 0), jnp.float32)
+
+
+def fit_scales(x, spec: QuantSpec) -> jax.Array:
+    """Train scales from data (max-abs calibration over the table).
+
+    x: (N, d) float vectors; returns (N, 1) for per-vector int8, (1, d) for
+    per-dimension int8, and the zero-size placeholder otherwise.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if spec.dtype != "int8":
+        return no_scales()
+    axis = 0 if spec.per_dim else 1
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, _EPS) / INT8_LEVELS
+
+
+def quantize(x, spec: QuantSpec, scales=None) -> jax.Array:
+    """Encode (N, d) float vectors into the scheme's storage dtype.
+
+    For int8 the ``scales`` must come from :func:`fit_scales` on the SAME
+    scale groups (rows may be a gather of the calibration table only for
+    per-dimension scales).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if spec.dtype == "int8":
+        if scales is None:
+            raise ValueError("int8 quantize requires scales (fit_scales)")
+        codes = jnp.round(x / jnp.asarray(scales, jnp.float32))
+        return jnp.clip(codes, -INT8_LEVELS, INT8_LEVELS).astype(jnp.int8)
+    if spec.dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    return x
+
+
+def dequantize(codes, spec: QuantSpec, scales=None) -> jax.Array:
+    """Decode stored codes back to float32 (the rerank-free f32 view)."""
+    if spec.dtype == "int8":
+        if scales is None:
+            raise ValueError("int8 dequantize requires scales")
+        return (jnp.asarray(codes, jnp.float32)
+                * jnp.asarray(scales, jnp.float32))
+    return jnp.asarray(codes).astype(jnp.float32)
+
+
+def query_levels(d: int) -> float:
+    """Integer levels for query codes in the int8 integer-dot fast path.
+
+    The query is transient (never stored or gathered), so it does NOT pay
+    the table's 8-bit budget: it quantizes onto the widest symmetric grid —
+    up to 15 bits — such that a length-``d`` dot of int8 table codes against
+    the query codes cannot overflow the int32 accumulator
+    (``127 · levels · d < 2^31``).  This keeps the asymmetric distance error
+    dominated by the STORED codes, matching the recall of an exact-query
+    reduction while every operand stays integer.
+    """
+    return float(min(32767, (2 ** 31 - 1) // (128 * max(d, 1))))
+
+
+def quantize_query(q: jax.Array, levels: float | None = None) -> tuple:
+    """Symmetrically quantize a query for the integer-dot fast path.
+
+    q: (..., d) float; returns (codes int32 (..., d), scale f32 (..., 1)).
+    Each query row gets its own max-abs scale — queries are never part of
+    the table's calibration.  ``levels`` defaults to :func:`query_levels`
+    for the query's dimensionality.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    if levels is None:
+        levels = query_levels(q.shape[-1])
+    amax = jnp.max(jnp.abs(q), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / levels
+    codes = jnp.clip(jnp.round(q / scale), -levels, levels).astype(jnp.int32)
+    return codes, scale
+
+
+def max_error_bound(spec: QuantSpec, scales) -> jax.Array:
+    """Elementwise reconstruction-error bound of the scheme.
+
+    int8: half a quantization step (broadcasts like ``scales``); bf16: 2^-8
+    relative (bfloat16 has 8 mantissa bits incl. the implicit one); none: 0.
+    """
+    if spec.dtype == "int8":
+        return jnp.asarray(scales, jnp.float32) * 0.5
+    if spec.dtype == "bf16":
+        return jnp.float32(2.0 ** -8)   # RELATIVE bound, caller scales by |x|
+    return jnp.float32(0.0)

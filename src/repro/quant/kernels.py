@@ -1,0 +1,243 @@
+"""Quantized distance backends for the neighbor-expansion hot path.
+
+These are drop-in ``DistFn`` implementations (see ``core.bfis.DistFn``)
+that read the index's QUANTIZED table (``PaddedCSR.codes`` + ``.scales``)
+instead of the float32 ``vectors`` — the gather-side payload shrinks 4x
+(int8) or 2x (bf16), which is exactly what the paper's memory-hierarchy
+analysis says bounds expansion throughput.  They register themselves with
+``repro.kernels.registry`` so search algorithms never change:
+
+* ``ref_int8``       — pure-jnp int8 gather; per-vector scales take the
+  integer fast path (int32-accumulated dot against an integer-quantized
+  query on the widest non-overflowing grid, ONE f32 rescale per candidate);
+  per-dimension scales dequantize the gathered rows and reduce in f32
+  (memory win only).
+* ``rowgather_int8`` — scalar-prefetch Pallas kernel: candidate ids drive
+  the BlockSpec index_map of BOTH the int8 code rows and their per-vector
+  scale rows, the VPU accumulates the code dot in int32 and rescales once.
+  Per-vector scales only (the integer path is the point of the kernel).
+* ``ref_bf16``       — pure-jnp bf16 gather, f32 reduction (scale-free).
+
+Every backend serves every metric: "l2" uses
+``s²·‖cx‖² − 2·s·s_q·(cx·c_q) + ‖q‖²`` with the EXACT f32 query norm (the
+only exact term available without touching the f32 table), "ip"/"cosine"
+use ``−s·s_q·(cx·c_q)``.  Distances are float32, padded ids (≥ N) map to
++inf — identical contracts to the f32 backends, so the two-stage re-ranked
+search composes with any of them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.registry import register_backend
+from repro.quant.codec import quantize_query
+
+
+def require_codes(graph, dtype: str):
+    """Trace-time check that the graph carries a ``dtype`` quantized table.
+
+    Raises with build guidance instead of a shape error deep inside jit."""
+    codes, scales = getattr(graph, "codes", None), getattr(graph, "scales",
+                                                           None)
+    if codes is None or codes.size == 0:
+        raise ValueError(
+            f"the '{dtype}' distance backends need a quantized table; "
+            f"build the index with IndexSpec(quant=\"{dtype}\")")
+    want = jnp.int8 if dtype == "int8" else jnp.bfloat16
+    if codes.dtype != want:
+        raise ValueError(
+            f"index is quantized as {codes.dtype}, not {dtype}; pick the "
+            f"matching backend or rebuild with IndexSpec(quant=\"{dtype}\")")
+    return codes, scales
+
+
+def _kmetric(metric: str) -> str:
+    if metric in ("ip", "cosine"):
+        return "ip"
+    if metric == "l2":
+        return "l2"
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+# ---------------------------------------------------------------------------
+# ref_int8 / ref_bf16: pure-jnp quantized gathers
+# ---------------------------------------------------------------------------
+
+def make_int8_dist_fn(metric: str = "l2"):
+    """Int8 DistFn: int32-accumulated integer dot (per-vector scales) or
+    dequantize-and-reduce (per-dimension scales)."""
+    kmetric = _kmetric(metric)
+
+    def dist_fn(graph, active_ids, nbr_ids, q):
+        codes, scales = require_codes(graph, "int8")
+        m, r = nbr_ids.shape
+        flat = nbr_ids.reshape(-1)
+        n = graph.n_nodes
+        safe = jnp.minimum(flat, n - 1)
+        rows = codes[safe]                                 # (C, d) int8
+        qf = q.astype(jnp.float32)
+        per_dim = scales.shape[0] == 1                     # static at trace
+        if per_dim:
+            x = rows.astype(jnp.float32) * scales          # (C, d) f32
+            if kmetric == "ip":
+                d = -(x @ qf)
+            else:
+                d = jnp.sum((x - qf[None, :]) ** 2, axis=-1)
+        else:
+            # query codes live on a wider grid (codec.query_levels) sized so
+            # the int8 x query dot cannot overflow the int32 accumulator;
+            # the asymmetric error stays dominated by the stored codes
+            qc, qs = quantize_query(qf)                    # (d,) i32, (1,)
+            acc = rows.astype(jnp.int32) @ qc              # (C,) i32
+            s = scales[safe, 0]                            # (C,) f32
+            xq = s * qs[0] * acc.astype(jnp.float32)
+            if kmetric == "ip":
+                d = -xq
+            else:
+                rn2 = jnp.sum(rows.astype(jnp.int32) ** 2, axis=-1)
+                q2 = jnp.sum(qf * qf)
+                d = jnp.maximum(
+                    s * s * rn2.astype(jnp.float32) - 2.0 * xq + q2, 0.0)
+        d = jnp.where(flat < n, d, jnp.inf)
+        return d.reshape(m, r)
+    return dist_fn
+
+
+def make_bf16_dist_fn(metric: str = "l2"):
+    """bf16 DistFn: half-width gather, f32 reduction, no scales."""
+    kmetric = _kmetric(metric)
+
+    def dist_fn(graph, active_ids, nbr_ids, q):
+        codes, _ = require_codes(graph, "bf16")
+        m, r = nbr_ids.shape
+        flat = nbr_ids.reshape(-1)
+        n = graph.n_nodes
+        rows = codes[jnp.minimum(flat, n - 1)].astype(jnp.float32)
+        qf = q.astype(jnp.float32)
+        if kmetric == "ip":
+            d = -(rows @ qf)
+        else:
+            d = jnp.sum((rows - qf[None, :]) ** 2, axis=-1)
+        d = jnp.where(flat < n, d, jnp.inf)
+        return d.reshape(m, r)
+    return dist_fn
+
+
+# ---------------------------------------------------------------------------
+# rowgather_int8: scalar-prefetch Pallas kernel (int32 accumulate + rescale)
+# ---------------------------------------------------------------------------
+
+def _rowgather_int8_kernel(ids_ref, row_ref, scale_ref, qc_ref, qmeta_ref,
+                           out_ref, *, n_nodes: int, metric: str):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    sid = ids_ref[b, c]
+    row = row_ref[0, :].astype(jnp.int32)                  # int8 -> i32
+    qc = qc_ref[0, :]                                      # i32 query codes
+    acc = jnp.sum(row * qc)                                # i32 accumulation
+    s = scale_ref[0, 0]                                    # per-vector scale
+    xq = s * qmeta_ref[0, 0] * acc.astype(jnp.float32)     # one f32 rescale
+    if metric == "ip":
+        dist = -xq
+    else:
+        rn2 = jnp.sum(row * row)                           # i32 accumulation
+        dist = jnp.maximum(
+            s * s * rn2.astype(jnp.float32) - 2.0 * xq + qmeta_ref[0, 1],
+            0.0)
+    out_ref[0, 0] = jnp.where(sid < n_nodes, dist, jnp.float32(jnp.inf))
+
+
+def int8dist_rowgather(
+    codes: jax.Array, scales: jax.Array, ids: jax.Array, queries: jax.Array,
+    *, interpret: bool | None = None, metric: str = "l2",
+) -> jax.Array:
+    """(N,d) int8 codes + (N,1) scales, (B,C) ids, (B,d) f32 queries ->
+    (B,C) f32 distances.
+
+    The prefetched candidate ids drive TWO index_maps — the int8 code row
+    and its (1, 1) scale row stream together, so the pipeline's gather-side
+    traffic is ~d bytes per candidate instead of 4d.  Query quantization
+    (codes + [scale, ‖q‖²] meta) happens once per call outside the grid.
+    """
+    from repro.kernels import ops
+    itp = ops.INTERPRET if interpret is None else interpret
+    n, d = codes.shape
+    bsz, c = ids.shape
+    if scales.shape != (n, 1):
+        # the scale BlockSpec below streams scales BY CANDIDATE ROW ID —
+        # per-dimension (1, d) scales would silently mis-read block (0, 0)
+        raise ValueError(
+            f"int8dist_rowgather needs per-vector scales of shape "
+            f"({n}, 1), got {scales.shape}; per-dimension scales are "
+            f"served by the 'ref_int8' backend")
+    qc, qs = quantize_query(queries)                       # (B,d) i8, (B,1)
+    q2 = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    qmeta = jnp.concatenate([qs, q2], axis=1)              # (B, 2) f32
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, c),
+        in_specs=[
+            pl.BlockSpec(
+                (1, d), lambda b, cc, ids_ref: (jnp.minimum(
+                    ids_ref[b, cc], n - 1), 0)),
+            pl.BlockSpec(
+                (1, 1), lambda b, cc, ids_ref: (jnp.minimum(
+                    ids_ref[b, cc], n - 1), 0)),
+            pl.BlockSpec((1, d), lambda b, cc, ids_ref: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b, cc, ids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, cc, ids_ref: (b, cc)),
+    )
+    kernel = functools.partial(_rowgather_int8_kernel, n_nodes=n,
+                               metric=_kmetric(metric))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, c), jnp.float32),
+        interpret=itp,
+    )(ids, codes, scales, qc, qmeta)
+
+
+def make_rowgather_int8_dist_fn(metric: str = "l2"):
+    """Pallas int8 DistFn (B=1 adapter, mirroring ``registry.make_dist_fn``)."""
+    def dist_fn(graph, active_ids, nbr_ids, q):
+        codes, scales = require_codes(graph, "int8")
+        if scales.shape[0] == 1:
+            raise NotImplementedError(
+                "rowgather_int8 implements the per-vector-scale integer "
+                "path; per-dimension scales are served by 'ref_int8'")
+        m, r = nbr_ids.shape
+        d = int8dist_rowgather(codes, scales,
+                               nbr_ids.reshape(1, m * r), q[None, :],
+                               metric=metric)
+        return d[0].reshape(m, r)
+    return dist_fn
+
+
+# ---------------------------------------------------------------------------
+# registry entries — selectable purely via SearchParams.backend
+# ---------------------------------------------------------------------------
+
+def _cfg_metric(cfg) -> str:
+    return getattr(cfg, "metric", "l2") or "l2"
+
+
+@register_backend("ref_int8")
+def _ref_int8_backend(cfg):
+    return make_int8_dist_fn(_cfg_metric(cfg))
+
+
+@register_backend("rowgather_int8")
+def _rowgather_int8_backend(cfg):
+    return make_rowgather_int8_dist_fn(_cfg_metric(cfg))
+
+
+@register_backend("ref_bf16")
+def _ref_bf16_backend(cfg):
+    return make_bf16_dist_fn(_cfg_metric(cfg))

@@ -1,0 +1,89 @@
+"""Quantization schemes for stored index vectors.
+
+Speed-ANN's neighbor expansion is memory-bound (Challenges II & IV): the hot
+loop gathers ≤ M·R candidate vectors per step, so the bytes-per-candidate of
+the STORED representation directly bounds expansion throughput.  A
+:class:`QuantSpec` describes how the embedding table is stored:
+
+* ``dtype="none"`` — float32, the seed behaviour;
+* ``dtype="bf16"`` — bfloat16 storage (2x smaller gathers, no scales);
+* ``dtype="int8"`` — symmetric int8 codes + float32 scales (4x smaller
+  gathers; distances accumulate in int32 and rescale — see
+  ``repro.quant.kernels``).
+
+Scales are *trained from data* (max-abs calibration over the table, see
+``repro.quant.codec.fit_scales``) with two granularities:
+
+* per-vector (``per_dim=False``, scales ``(N, 1)``) — each row has its own
+  scale, so the int8 dot against an int8 query rescales with ONE f32 multiply
+  per candidate (the int32-accumulation fast path);
+* per-dimension (``per_dim=True``, scales ``(1, d)``) — columns share a scale
+  (better for anisotropic embeddings); distances dequantize the gathered rows
+  and reduce in f32 (the memory win is kept, the integer-dot win is not).
+
+Quantized traversal is approximate; the AQR-HNSW-style two-stage search
+(``SearchParams.rerank_k``) recovers full-precision recall by exactly
+re-ranking a widened candidate pool against the float32 vectors —
+``keep_float`` controls whether that copy is persisted with the index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+QUANT_DTYPES = ("none", "int8", "bf16")
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """How the index's embedding table is quantized (an index-time property,
+    persisted with the index inside ``IndexSpec``)."""
+    dtype: str = "none"       # "none" | "int8" | "bf16"
+    per_dim: bool = False     # int8 scale granularity: per-vector rows
+    #                           (False) or per-dimension columns (True)
+    keep_float: bool = True   # persist the float32 vectors alongside the
+    #                           codes so search can re-rank exactly; False
+    #                           stores codes+scales only (smallest artifact;
+    #                           the f32 table is rebuilt by dequantization)
+
+    def __post_init__(self):
+        if self.dtype not in QUANT_DTYPES:
+            raise ValueError(
+                f"unknown quant dtype {self.dtype!r}; one of {QUANT_DTYPES}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.dtype != "none"
+
+    def with_(self, **kw) -> "QuantSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def coerce_quant(value) -> QuantSpec:
+    """Normalize the user-facing forms of a quant spec.
+
+    ``IndexSpec(quant="int8")`` and the json round-trip (a plain dict) both
+    lower onto a :class:`QuantSpec`; ``None`` means disabled."""
+    if value is None:
+        return QuantSpec()
+    if isinstance(value, QuantSpec):
+        return value
+    if isinstance(value, str):
+        return QuantSpec(dtype=value)
+    if isinstance(value, dict):
+        return QuantSpec(**value)
+    raise TypeError(f"quant must be a QuantSpec, dtype string, or dict; "
+                    f"got {type(value).__name__}")
+
+
+def required_quant_dtype(backend: str) -> str:
+    """The quant dtype a distance backend needs ("none" for f32 backends).
+
+    Quantized backends follow the ``<base>_<dtype>`` naming convention
+    (``ref_int8``, ``rowgather_int8``, ``ref_bf16``); the facade uses this to
+    validate ``SearchParams.backend`` against ``IndexSpec.quant`` before
+    tracing."""
+    for dtype in ("int8", "bf16"):
+        if backend.endswith("_" + dtype):
+            return dtype
+    return "none"

@@ -15,9 +15,13 @@ config knob, not a code path.
 
 The engine is a stage of the ``repro.ann`` facade lifecycle: pass an
 :class:`repro.ann.AnnIndex` + :class:`repro.ann.SearchParams` (or call
-``index.serve(params)``) and the engine inherits the index's metric
-(normalizing queries for cosine) and neighbor-grouping id remap.  The
-legacy ``(PaddedCSR, SearchConfig)`` form keeps working.
+``index.serve(params)``) and the engine serves through the index's own
+cached searchers — inheriting the metric handling (query normalization for
+cosine), neighbor-grouping id remap, quantized distance backends
+(``backend="ref_int8" | "rowgather_int8" | "ref_bf16"`` on an index built
+with ``IndexSpec(quant=...)``), and the two-stage re-ranked search
+(``SearchParams.rerank_k``).  The legacy ``(PaddedCSR, SearchConfig)`` form
+keeps working.
 
 Typical use::
 
@@ -82,9 +86,25 @@ class AnnEngine:
             self._normalize = self.index.spec.metric == "cosine"
             self._old_from_new = self.index.old_from_new
         metric = self.index.spec.metric if self.index is not None else None
+        self.params: Optional[SearchParams] = None
         if isinstance(cfg, SearchParams):
             if algorithm is None:
                 algorithm = cfg.algorithm
+            if self.index is not None and dist_fn is None:
+                # facade path: serve through the index's own searchers, so
+                # the engine inherits everything the facade wires — metric
+                # normalization, grouping remap, quantized distance
+                # backends, and the two-stage re-ranked search (rerank_k)
+                self.params = cfg.with_(algorithm=algorithm)
+            elif cfg.rerank_k > 0:
+                # the two-stage re-rank lives in the facade searcher;
+                # silently serving single-stage results would hand the
+                # caller lower recall than the identical params via
+                # AnnIndex.search
+                raise ValueError(
+                    "rerank_k needs the facade serving path: construct the "
+                    "engine as AnnEngine(AnnIndex, SearchParams) / "
+                    "index.serve(params) without a custom dist_fn")
             cfg = cfg.to_search_config(metric or "l2")
         elif metric is not None and cfg.metric != metric:
             # the index's metric is authoritative over a hand-built config
@@ -106,18 +126,22 @@ class AnnEngine:
         self.cfg = cfg
         self.algorithm = algorithm
         self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
-        self._dist_fn = resolve_dist_fn(cfg, dist_fn)
-        self._search = _ALGORITHMS[algorithm]
-        if (algorithm == "bfis" and self.index is not None
-                and self.index.hnsw is not None):
-            # match AnnIndex.search: bfis on an hnsw-built index enters via
-            # the greedy upper-level descent, not from the base medoid
-            hnsw = self.index.hnsw
+        self._dist_fn = self._search = None
+        if self.params is None:
+            # legacy pipeline only — the facade path serves through
+            # index.searcher and never touches these
+            self._dist_fn = resolve_dist_fn(cfg, dist_fn)
+            self._search = _ALGORITHMS[algorithm]
+            if (algorithm == "bfis" and self.index is not None
+                    and self.index.hnsw is not None):
+                # match AnnIndex.search: bfis on an hnsw-built index enters
+                # via the greedy upper-level descent, not the base medoid
+                hnsw = self.index.hnsw
 
-            def _hnsw_bfis(g, q, c, dist_fn=None):
-                return hnsw_search_batch(hnsw._replace(base=g), q, c,
-                                         dist_fn=dist_fn)
-            self._search = _hnsw_bfis
+                def _hnsw_bfis(g, q, c, dist_fn=None):
+                    return hnsw_search_batch(hnsw._replace(base=g), q, c,
+                                             dist_fn=dist_fn)
+                self._search = _hnsw_bfis
         # device-resident remap table, uploaded ONCE per engine (it enters
         # every bucket's executable as a jit argument, like the graph)
         self._ofn = (jnp.asarray(self._old_from_new, jnp.int32)
@@ -145,6 +169,13 @@ class AnnEngine:
         fn = self._jit_cache.get(bucket)
         if fn is None:
             self.cache_misses += 1
+            if self.params is not None:
+                # every bucket shares the index's ONE cached searcher; its
+                # inner jax.jit keys on the padded batch shape, so cache
+                # accounting per bucket stays exact
+                fn = self.index.searcher(self.params)
+                self._jit_cache[bucket] = fn
+                return fn
             # the graph's arrays enter as jit ARGUMENTS, not closure
             # constants, so every bucket's executable shares the one
             # device-resident embedding table instead of baking its own copy
@@ -155,9 +186,11 @@ class AnnEngine:
             n_nodes = self.graph.n_nodes
 
             @jax.jit
-            def jitted(nbrs, vectors, medoid, flat, ofn_arr, q):
+            def jitted(nbrs, vectors, medoid, flat, codes, scales, ofn_arr,
+                       q):
                 g = graph_cls(nbrs=nbrs, vectors=vectors, medoid=medoid,
-                              n_top=n_top, flat=flat)
+                              n_top=n_top, flat=flat, codes=codes,
+                              scales=scales)
                 q = q.astype(jnp.float32)
                 if normalize:
                     q = normalize_queries(q)
@@ -169,7 +202,7 @@ class AnnEngine:
             def fn(q, _j=jitted):
                 gr = self.graph
                 return _j(gr.nbrs, gr.vectors, gr.medoid, gr.flat,
-                          self._ofn, q)
+                          gr.codes, gr.scales, self._ofn, q)
             self._jit_cache[bucket] = fn
         else:
             self.cache_hits += 1
@@ -261,8 +294,11 @@ class AnnEngine:
 
     # -- observability -----------------------------------------------------
 
-    def metrics(self) -> Dict[str, float]:
-        """Serving counters: traffic, jit-cache behaviour, latency, recall."""
+    def stats(self) -> Dict[str, float]:
+        """Serving observability: traffic/jit-cache counters AND the
+        per-request latency distribution (mean, p50/p90/p95/p99, max) —
+        tail percentiles are where quantized backends / re-ranking budgets
+        show up from the serving layer, not in the means."""
         lat = np.asarray(self._latencies_ms, np.float64)
         out = {
             "queries_served": float(self.queries_served),
@@ -277,8 +313,14 @@ class AnnEngine:
                 latency_mean_ms=float(lat.mean()),
                 latency_p50_ms=float(np.percentile(lat, 50)),
                 latency_p90_ms=float(np.percentile(lat, 90)),
+                latency_p95_ms=float(np.percentile(lat, 95)),
                 latency_p99_ms=float(np.percentile(lat, 99)),
+                latency_max_ms=float(lat.max()),
             )
         if self._recall_n:
             out["recall_at_k"] = self._recall_sum / self._recall_n
         return out
+
+    def metrics(self) -> Dict[str, float]:
+        """Back-compat alias of :meth:`stats`."""
+        return self.stats()

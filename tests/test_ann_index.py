@@ -10,6 +10,7 @@ The acceptance bar for the unified API:
   * the §5.3 ablation variants are distinguishable configurations.
 """
 import dataclasses
+import os
 
 import numpy as np
 import pytest
@@ -20,6 +21,7 @@ from repro.core import recall_at_k, variant
 from repro.core.build import exact_knn
 from repro.data import make_vector_dataset
 from repro.kernels import available_backends
+from repro.quant import QuantSpec, required_quant_dtype
 
 METRICS = ("l2", "ip", "cosine")
 ALGOS = ("bfis", "topm", "speedann")
@@ -90,14 +92,18 @@ def test_exact_knn_metric_semantics(ds):
 
 @pytest.mark.parametrize("metric", METRICS)
 def test_recall_and_backend_parity(ds, indices, gts, metric):
-    """Every registered backend serves every metric: recall@10 >= 0.9
+    """Every registered fp32 backend serves every metric: recall@10 >= 0.9
     against metric-aware exact_knn, and all backends agree on result ids
-    (the Pallas kernels retrace the ref search)."""
+    (the Pallas kernels retrace the ref search).  Quantized backends read a
+    codes table a fp32 index does not have — they get their own matrix
+    below."""
     index = indices[metric]
     gt = gts[metric]
     ids_by_backend = {}
+    fp32_backends = [b for b in available_backends()
+                     if required_quant_dtype(b) == "none"]
     for backend in ("ref",) + tuple(
-            b for b in available_backends() if b != "ref"):
+            b for b in fp32_backends if b != "ref"):
         res = index.search(ds.queries,
                            PARAMS.with_(algorithm="speedann",
                                         backend=backend))
@@ -202,6 +208,146 @@ def test_serve_inherits_metric(ds, indices, gts):
     direct = index.search(ds.queries[:6], PARAMS)
     np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
     assert engine.metrics()["recall_at_k"] >= 0.9
+
+
+# -- quantized storage + two-stage re-ranked search --------------------------
+
+# the quantized arm turns its own recall knobs: a widened re-rank pool AND a
+# deeper stage-1 traversal (quantized distance noise can derail one query's
+# descent at the fp32 queue depth; the paper's L is exactly this knob)
+QPARAMS = PARAMS.with_(algorithm="speedann", rerank_k=30, queue_len=128)
+
+
+@pytest.fixture(scope="module")
+def int8_indices(ds):
+    return {m: AnnIndex.build(ds, IndexSpec(metric=m, degree=16, passes=1,
+                                            quant="int8"))
+            for m in METRICS}
+
+
+@pytest.fixture(scope="module")
+def bf16_index(ds):
+    return AnnIndex.build(ds, IndexSpec(metric="l2", degree=16, passes=1,
+                                        quant="bf16"))
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("backend", ("ref_int8", "rowgather_int8"))
+def test_two_stage_recall_matches_fp32(ds, indices, int8_indices, gts,
+                                       metric, backend):
+    """The acceptance bar for the two-stage path: int8 traversal + exact
+    re-ranking loses at most 0.02 recall vs the fp32 search, on every
+    metric, with the backend selected purely via SearchParams."""
+    gt = gts[metric]
+    r_fp32 = recall_at_k(np.asarray(
+        indices[metric].search(ds.queries, PARAMS).ids), gt, 10)
+    r_q = recall_at_k(np.asarray(
+        int8_indices[metric].search(
+            ds.queries, QPARAMS.with_(backend=backend)).ids), gt, 10)
+    assert r_q >= r_fp32 - 0.02, f"{metric}/{backend}: {r_q} vs {r_fp32}"
+
+
+def test_bf16_backend_recall(ds, indices, gts, bf16_index):
+    r_fp32 = recall_at_k(np.asarray(
+        indices["l2"].search(ds.queries, PARAMS).ids), gts["l2"], 10)
+    r_bf = recall_at_k(np.asarray(
+        bf16_index.search(ds.queries,
+                          QPARAMS.with_(backend="ref_bf16")).ids),
+        gts["l2"], 10)
+    assert r_bf >= r_fp32 - 0.02
+
+
+def test_quant_roundtrip_codes_bit_identical(ds, int8_indices, tmp_path):
+    """npz round-trip preserves codes + scales exactly and search results
+    bit for bit."""
+    index = int8_indices["l2"]
+    loaded = AnnIndex.load(index.save(str(tmp_path / "q8")))
+    assert loaded.spec == index.spec
+    assert loaded.spec.quant == QuantSpec(dtype="int8")
+    np.testing.assert_array_equal(np.asarray(loaded.graph.codes),
+                                  np.asarray(index.graph.codes))
+    np.testing.assert_array_equal(np.asarray(loaded.graph.scales),
+                                  np.asarray(index.graph.scales))
+    for backend in ("ref_int8", "rowgather_int8"):
+        p = QPARAMS.with_(backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(loaded.search(ds.queries, p).ids),
+            np.asarray(index.search(ds.queries, p).ids),
+            err_msg=backend)
+
+
+def test_bf16_roundtrip_codes_bit_identical(ds, bf16_index, tmp_path):
+    """bf16 codes persist as uint16 bit patterns; the round-trip restores
+    the exact bfloat16 table (also with keep_float=False, where load
+    rebuilds the f32 vectors by dequantizing)."""
+    loaded = AnnIndex.load(bf16_index.save(str(tmp_path / "bf16")))
+    assert str(loaded.graph.codes.dtype) == "bfloat16"
+    np.testing.assert_array_equal(
+        np.asarray(loaded.graph.codes).view(np.uint16),
+        np.asarray(bf16_index.graph.codes).view(np.uint16))
+    p = QPARAMS.with_(backend="ref_bf16")
+    np.testing.assert_array_equal(
+        np.asarray(loaded.search(ds.queries, p).ids),
+        np.asarray(bf16_index.search(ds.queries, p).ids))
+    # keep_float=False: vectors are not persisted, load dequantizes
+    small = AnnIndex.build(ds.base[:500], IndexSpec(
+        metric="l2", degree=12, passes=1,
+        quant=QuantSpec(dtype="bf16", keep_float=False)))
+    path = small.save(str(tmp_path / "bf16_small"))
+    assert "vectors" not in np.load(path).files
+    loaded = AnnIndex.load(path)
+    np.testing.assert_array_equal(
+        np.asarray(loaded.graph.vectors),
+        np.asarray(small.graph.vectors))
+    np.testing.assert_array_equal(
+        np.asarray(loaded.search(ds.queries[:4], p).ids),
+        np.asarray(small.search(ds.queries[:4], p).ids))
+
+
+def test_int8_artifact_is_smaller(ds, indices, tmp_path):
+    """With keep_float=False the persisted vector payload shrinks ~4x and
+    the two-stage search still works (re-ranking against the dequantized
+    table)."""
+    fp_path = indices["l2"].save(str(tmp_path / "fp32"))
+    small = AnnIndex.build(ds, IndexSpec(
+        metric="l2", degree=16, passes=1,
+        quant=QuantSpec(dtype="int8", keep_float=False)))
+    small_path = small.save(str(tmp_path / "q8small"))
+    zf, zq = np.load(fp_path), np.load(small_path)
+    assert "vectors" not in zq.files
+    assert zf["vectors"].nbytes == 4 * zq["codes"].nbytes
+    assert os.path.getsize(small_path) < os.path.getsize(fp_path)
+    loaded = AnnIndex.load(small_path)
+    gt, _ = loaded.exact(ds.queries, 10)
+    ids = np.asarray(loaded.search(
+        ds.queries, QPARAMS.with_(backend="ref_int8")).ids)
+    assert recall_at_k(ids, gt, 10) >= 0.9
+
+
+def test_quant_backend_requires_matching_index(ds, indices, int8_indices):
+    with pytest.raises(ValueError, match="codes table"):
+        indices["l2"].search(ds.queries, PARAMS.with_(backend="ref_int8"))
+    with pytest.raises(ValueError, match="codes table"):
+        int8_indices["l2"].search(ds.queries,
+                                  PARAMS.with_(backend="ref_bf16"))
+    with pytest.raises(ValueError, match="sharded"):
+        int8_indices["l2"].searcher(PARAMS.with_(algorithm="sharded",
+                                                 backend="ref_int8"))
+
+
+def test_serve_inherits_quantized_two_stage(ds, int8_indices):
+    """index.serve() on a quantized index runs the identical two-stage
+    searcher: engine results match direct facade search bit for bit, and
+    stats() exposes the per-request latency percentiles."""
+    index = int8_indices["cosine"]
+    p = QPARAMS.with_(backend="ref_int8")
+    engine = index.serve(p, bucket_sizes=(4, 8))
+    res = engine.search(ds.queries[:6])
+    direct = index.search(ds.queries[:6], p)
+    np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
+    s = engine.stats()
+    for key in ("latency_p50_ms", "latency_p95_ms", "latency_p99_ms"):
+        assert key in s and s[key] >= 0.0
 
 
 # -- §5.3 ablation variants --------------------------------------------------
