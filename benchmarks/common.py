@@ -8,8 +8,10 @@ the paper's 1M–1B runs map onto the dry-run/roofline path instead.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +113,34 @@ def latency_at_recall(
             return us / ds.queries.shape[0], r, stats.summary()
         best = (best[0], max(best[1], r), best[2])
     return best
+
+
+def merge_trajectory_rows(out_path: str, new_rows: list,
+                          row_key: Callable[[Dict], tuple],
+                          superseded: Optional[Callable] = None) -> list:
+    """Shared append semantics for the BENCH_*.json trajectory files
+    (docs/benchmarks.md): existing rows + new rows, where a new row
+    REPLACES any existing row with the same ``row_key``.
+
+    ``superseded(row, new_rows) -> bool`` optionally retires additional
+    legacy rows (e.g. rows written before a key field existed, which would
+    otherwise double-count their machine in the trajectory forever).
+    """
+    existing = []
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                existing = json.load(f).get("rows", [])
+        except (json.JSONDecodeError, OSError):
+            existing = []
+    fresh = {row_key(r) for r in new_rows}
+
+    def drop(r):
+        if row_key(r) in fresh:
+            return True
+        return bool(superseded and superseded(r, new_rows))
+
+    return [r for r in existing if not drop(r)] + new_rows
 
 
 def modeled_parallel_us(us: float, stats: dict) -> float:

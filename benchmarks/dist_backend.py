@@ -19,7 +19,6 @@ measure the emulation, not Mosaic.
 from __future__ import annotations
 
 import json
-import os
 import platform
 import time
 from typing import Dict
@@ -28,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import dataset, nsg_index, time_batched
+from benchmarks.common import (dataset, merge_trajectory_rows, nsg_index,
+                               time_batched)
 from repro.ann import SearchParams
 from repro.core import recall_at_k
 from repro.kernels import available_backends
@@ -50,32 +50,17 @@ def _row_key(row: Dict) -> tuple:
             row.get("host", "<unknown>"), row.get("interpret"))
 
 
-def _merge_rows(out_path: str, new_rows: list) -> list:
-    """Existing rows (any prior format) + new rows, deduped by key.
-
-    Legacy rows written before the ``host`` field existed cannot name their
-    machine; they are superseded by any new row with the same (searcher,
-    backend, interpret) — otherwise a re-run on the very machine that wrote
-    them would double-count it in the trajectory forever."""
-    existing = []
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                existing = json.load(f).get("rows", [])
-        except (json.JSONDecodeError, OSError):
-            existing = []
-    fresh = {_row_key(r) for r in new_rows}
-    fresh_hostless = {(r.get("searcher"), r.get("backend"),
-                       r.get("interpret")) for r in new_rows}
-
-    def superseded(r):
-        if _row_key(r) in fresh:
-            return True
-        return "host" not in r and (
-            (r.get("searcher"), r.get("backend"),
-             r.get("interpret")) in fresh_hostless)
-
-    return [r for r in existing if not superseded(r)] + new_rows
+def _hostless_superseded(row: Dict, new_rows: list) -> bool:
+    """Legacy rows written before the ``host`` field existed cannot name
+    their machine; they are superseded by any new row with the same
+    (searcher, backend, interpret) — otherwise a re-run on the very machine
+    that wrote them would double-count it in the trajectory forever."""
+    if "host" in row:
+        return False
+    return (row.get("searcher"), row.get("backend"),
+            row.get("interpret")) in {
+        (r.get("searcher"), r.get("backend"), r.get("interpret"))
+        for r in new_rows}
 
 
 def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
@@ -131,7 +116,8 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
                   f"quant={quant};"
                   f"ids_match_ref={row['ids_match_ref']}")
 
-    all_rows = _merge_rows(out_path, rows)
+    all_rows = merge_trajectory_rows(out_path, rows, _row_key,
+                                     superseded=_hostless_superseded)
     payload = {
         "bench": "dist_backend",
         "config": {"n": n, "q": q, "k": K, "m_max": BASE.m_max,

@@ -24,11 +24,22 @@ def main() -> None:
                          "BENCH_dist_backend.json (skips the figure suite)")
     ap.add_argument("--bench-out", default="BENCH_dist_backend.json",
                     help="output path for --sweep-backends")
+    ap.add_argument("--sweep-serve", action="store_true",
+                    help="latency-under-load sweep through the async "
+                         "coalescing engine; writes BENCH_serve.json "
+                         "(skips the figure suite)")
+    ap.add_argument("--serve-out", default="BENCH_serve.json",
+                    help="output path for --sweep-serve")
     args = ap.parse_args()
 
     if args.sweep_backends:
         from benchmarks import dist_backend
         dist_backend.sweep(args.bench_out)
+        return
+
+    if args.sweep_serve:
+        from benchmarks import serve_load
+        serve_load.sweep(args.serve_out)
         return
 
     from benchmarks import paper_figs

@@ -1,0 +1,176 @@
+"""Latency-under-load sweep: client-observed percentiles vs offered QPS.
+
+``PYTHONPATH=src python -m benchmarks.run --sweep-serve``
+
+An open-loop load generator offers single-query requests at Poisson arrival
+times (exponential inter-arrivals at each target QPS) to the async
+coalescing front-end (``AnnIndex.serve_async``), which batches them under
+the max-batch / max-wait policy and dispatches through the bucketed jit
+cache.  Each request's latency is CLIENT-OBSERVED — submit to future
+resolution, so queueing + coalescing wait + batch execution — which is the
+number a caller of a serving system actually sees, and the one where
+coalescing trades a little p50 for a lot of throughput.
+
+``BENCH_serve.json`` is a TRAJECTORY with the same append semantics as
+``BENCH_dist_backend.json``: each sweep APPENDS rows, replacing only rows
+with the same (mode, backend, host, interpret, qps_offered) key, so
+interpret-mode CPU numbers and future compiled Mosaic/TPU numbers
+accumulate side by side.  Row schema is documented in docs/benchmarks.md.
+
+On this CPU container absolute latencies measure single-core interpret-mode
+execution — the shape of the latency-vs-load curve (flat until saturation,
+then queueing blow-up) is the meaningful output, not the milliseconds.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+from concurrent.futures import wait as futures_wait
+from typing import Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import dataset, merge_trajectory_rows, nsg_index
+from repro.ann import SearchParams
+from repro.kernels import ops as kops
+from repro.serve.coalescer import DeadlineExceeded
+
+K = 10
+PARAMS = SearchParams(k=K, queue_len=64, m_max=6, num_walkers=4,
+                      max_steps=256, local_steps=4, sync_ratio=0.8)
+BUCKETS = (1, 2, 4, 8, 16, 32)
+QPS_LADDER = (25, 50, 100, 200)
+
+
+def _row_key(row: Dict) -> tuple:
+    """Identity of a trajectory row: same key ⇒ newer run supersedes."""
+    return (row.get("mode"), row.get("backend"),
+            row.get("host", "<unknown>"), row.get("interpret"),
+            row.get("qps_offered"))
+
+
+def offered_load(srv, queries: np.ndarray, qps: float, duration_s: float,
+                 seed: int = 0, deadline_ms: Optional[float] = None) -> Dict:
+    """Open-loop Poisson arrivals at ``qps`` for ``duration_s`` seconds.
+
+    Open loop means arrivals do NOT wait for completions — exactly the
+    regime where queueing delay compounds and coalescing pays.  Returns
+    client-observed latency percentiles and throughput actually achieved.
+    Completion times come from ``AsyncServeResult.done_t``, stamped by the
+    dispatcher at resolution — done-callbacks run AFTER waiters wake, so
+    clocking them here would race.
+    """
+    rng = np.random.RandomState(seed)
+    arrivals, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / qps)
+        if t >= duration_s:
+            break
+        arrivals.append(t)
+    if not arrivals:
+        arrivals = [0.0]
+
+    futs = []
+    t0 = time.perf_counter()
+    for i, at in enumerate(arrivals):
+        sleep = t0 + at - time.perf_counter()
+        if sleep > 0:
+            time.sleep(sleep)
+        fut = srv.submit(queries[i % queries.shape[0]],
+                         deadline_ms=deadline_ms)
+        futs.append((time.perf_counter(), fut))
+    futures_wait([f for _, f in futs])
+    wall_s = time.perf_counter() - t0
+
+    lats, rejected = [], 0
+    for submit_t, fut in futs:
+        if fut.exception() is not None:
+            rejected += isinstance(fut.exception(), DeadlineExceeded)
+            continue
+        lats.append((fut.result().done_t - submit_t) * 1e3)
+    lat = np.asarray(lats, np.float64)
+    out = {
+        "qps_offered": float(qps),
+        "qps_achieved": float(len(lats) / wall_s),
+        "requests": len(arrivals),
+        "served": len(lats),
+        "rejected_deadline": int(rejected),
+        "duration_s": float(wall_s),
+    }
+    if lat.size:
+        out.update(
+            latency_mean_ms=float(lat.mean()),
+            latency_p50_ms=float(np.percentile(lat, 50)),
+            latency_p95_ms=float(np.percentile(lat, 95)),
+            latency_p99_ms=float(np.percentile(lat, 99)),
+            latency_max_ms=float(lat.max()),
+        )
+    return out
+
+
+def sweep(out_path: str = "BENCH_serve.json", n: int = 2000, q: int = 32,
+          qps_ladder: Sequence[float] = QPS_LADDER,
+          duration_s: float = 1.5, backend: str = "ref",
+          max_wait_ms: float = 2.0) -> Dict:
+    """One row per offered-QPS point; appends to the JSON trajectory."""
+    ds = dataset(n=n, q=q)
+    index = nsg_index(ds, degree=16)
+    params = PARAMS.with_(backend=backend)
+    host = platform.node() or platform.machine()
+    queries = np.asarray(ds.queries, np.float32)
+
+    rows = []
+    for qps in qps_ladder:
+        srv = index.serve_async(params, max_wait_ms=max_wait_ms,
+                                bucket_sizes=BUCKETS)
+        srv.engine.warmup(queries.shape[1])      # compiles outside the clock
+        try:
+            load = offered_load(srv, queries, qps, duration_s)
+        finally:
+            srv.close()
+        cstats = srv.stats()
+        row = {
+            "mode": "async_coalesced",
+            "backend": backend,
+            "quant": "none",
+            "algorithm": params.algorithm,
+            "host": host,
+            "interpret": bool(kops.INTERPRET),
+            "n": n,
+            "k": K,
+            "max_batch": srv.policy.max_batch,
+            "max_wait_ms": max_wait_ms,
+            "batch_size_mean": cstats.get("batch_size_mean", 1.0),
+            "unix_time": time.time(),
+            **load,
+        }
+        rows.append(row)
+        print(f"bench_serve_qps{qps:g},"
+              f"{row.get('latency_p50_ms', float('nan')):.1f},"
+              f"p95={row.get('latency_p95_ms', float('nan')):.1f};"
+              f"p99={row.get('latency_p99_ms', float('nan')):.1f};"
+              f"achieved={row['qps_achieved']:.0f}qps;"
+              f"batch_mean={row['batch_size_mean']:.1f}")
+
+    all_rows = merge_trajectory_rows(out_path, rows, _row_key)
+    payload = {
+        "bench": "serve",
+        "config": {"n": n, "q": q, "k": K, "buckets": list(BUCKETS),
+                   "duration_s": duration_s, "max_wait_ms": max_wait_ms,
+                   "queue_len": PARAMS.queue_len, "m_max": PARAMS.m_max},
+        "platform": platform.machine(),
+        "jax": jax.__version__,
+        "unix_time": time.time(),
+        "rows": all_rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path} ({len(rows)} new rows, "
+          f"{len(all_rows)} total in trajectory)")
+    return payload
+
+
+if __name__ == "__main__":
+    sweep()

@@ -1,16 +1,26 @@
 """END-TO-END DRIVER: batched ANN serving (the paper's kind is search
 serving, so this is the production-shaped example).
 
-Builds an index, then serves *variable-size* batched query traffic through
-``repro.serve.AnnEngine``: batches are quantized to a fixed bucket ladder so
-the jit cache stays bounded and warm while traffic sizes fluctuate, and the
-full Speed-ANN stack (staged parallel expansion, adaptive synchronization,
-bounded budgets) runs underneath with the distance backend picked by
-``--dist-backend``.
+Builds an index, then serves query traffic through the serving stack
+(docs/serving.md).  Two client models:
+
+* default — *variable-size batched* traffic through ``repro.serve.
+  AnnEngine``: batches are quantized to a fixed bucket ladder so the jit
+  cache stays bounded and warm while traffic sizes fluctuate;
+* ``--async-client`` — *single-query* traffic with per-request deadlines at
+  a Poisson arrival rate (``--qps``), coalesced into batches by
+  ``AsyncAnnEngine`` under the max-batch / max-wait policy and dispatched
+  through the same bucketed jit cache.
+
+Underneath, the full Speed-ANN stack (staged parallel expansion, adaptive
+synchronization, bounded budgets) runs with the distance backend picked by
+``--dist-backend``; ``--sharded`` dispatches every bucket through the
+``shard_map`` walker path (one walker per device on this host's mesh).
 
     PYTHONPATH=src python examples/serve_ann.py [--batches 20] \
         [--max-batch 32] [--dist-backend ref|rowgather|dma|ref_int8|...] \
-        [--metric l2|ip|cosine] [--quant none|int8|bf16] [--rerank-k 30]
+        [--metric l2|ip|cosine] [--quant none|int8|bf16] [--rerank-k 30] \
+        [--async-client --qps 50 --deadline-ms 200] [--sharded]
 
 ``--quant int8 --dist-backend ref_int8 --rerank-k 30`` serves the two-stage
 quantized configuration: int8 traversal, exact f32 re-ranking — the engine
@@ -18,6 +28,7 @@ inherits it all from the facade, and ``engine.stats()`` shows where the
 tail latency lands.
 """
 import argparse
+import time
 
 import numpy as np
 
@@ -47,6 +58,19 @@ def main():
     ap.add_argument("--rerank-k", type=int, default=0,
                     help="two-stage search: exact f32 re-rank of this many "
                          "stage-1 candidates (0 disables)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="dispatch every bucket through the shard_map "
+                         "walker path (one walker per device)")
+    ap.add_argument("--async-client", action="store_true",
+                    help="simulate single-query clients: Poisson arrivals "
+                         "with deadlines through the coalescing queue")
+    ap.add_argument("--qps", type=float, default=50.0,
+                    help="offered arrival rate for --async-client")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --async-client "
+                         "(default: none)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="coalescer max-wait flush for --async-client")
     args = ap.parse_args()
 
     print("== Speed-ANN serving driver ==")
@@ -59,9 +83,13 @@ def main():
                           max_steps=512, local_steps=8, sync_ratio=0.8,
                           backend=args.dist_backend,
                           rerank_k=args.rerank_k)
+    if args.sharded:
+        params = params.with_(algorithm="sharded", global_rounds=16)
 
     buckets = tuple(b for b in (1, 2, 4, 8, 16, 32, 64, 128)
                     if b <= args.max_batch)
+    if args.async_client:
+        return serve_async_clients(index, params, buckets, args)
     engine = index.serve(params, bucket_sizes=buckets)
     compile_s = engine.warmup(ds.base.shape[1])
     print(f"warmed {len(compile_s)} buckets "
@@ -94,6 +122,65 @@ def main():
           f"(hits={m['cache_hits']:.0f} misses={m['cache_misses']:.0f}) "
           f"padded={m['padded_queries']:.0f}")
     assert m["recall_at_k"] >= args.recall_target, "recall target missed"
+    print("OK")
+
+
+def serve_async_clients(index, params, buckets, args):
+    """Single-query clients at Poisson arrivals through the coalescer."""
+    srv = index.serve_async(params, max_wait_ms=args.max_wait_ms,
+                            default_deadline_ms=args.deadline_ms,
+                            bucket_sizes=buckets)
+    compile_s = srv.engine.warmup()
+    print(f"warmed {len(compile_s)} buckets; offering ~{args.qps:g} qps "
+          f"(deadline={args.deadline_ms} ms, "
+          f"max_wait={args.max_wait_ms:g} ms)")
+
+    rng = np.random.RandomState(0)
+    ds_dim = index.dim
+    n_requests = args.batches * args.max_batch
+    futs = []
+    t_next = time.perf_counter()
+    for _ in range(n_requests):
+        t_next += rng.exponential(1.0 / args.qps)
+        dt = t_next - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+        q = rng.normal(size=(ds_dim,)).astype(np.float32)
+        futs.append((time.perf_counter(), srv.submit(q)))
+    lats, rejected = [], 0
+    for submit_t, fut in futs:
+        try:
+            # done_t is stamped by the dispatcher at resolution (clocking
+            # here would measure this loop, not the request)
+            res = fut.result(timeout=120)
+            lats.append((res.done_t - submit_t) * 1e3)
+        except Exception:                        # noqa: BLE001 - deadline
+            rejected += 1
+    srv.close()
+
+    st, est = srv.stats(), srv.engine.stats()
+    if lats:
+        lat = np.asarray(lats)
+        print(f"client-observed: p50={np.percentile(lat, 50):.1f}ms "
+              f"p95={np.percentile(lat, 95):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms "
+              f"(n={lat.size})")
+    print(f"\nsubmitted {st['submitted']:.0f} requests -> "
+          f"{st['batches_dispatched']:.0f} batches "
+          f"(mean size {st.get('batch_size_mean', 1):.1f}) | "
+          f"served={st['served']:.0f} rejected={rejected} | "
+          f"queue wait p50={st.get('queue_wait_p50_ms', 0):.2f}ms "
+          f"p99={st.get('queue_wait_p99_ms', 0):.2f}ms")
+    print(f"engine: p50={est.get('latency_p50_ms', 0):.1f}ms "
+          f"p95={est.get('latency_p95_ms', 0):.1f}ms "
+          f"p99={est.get('latency_p99_ms', 0):.1f}ms | "
+          f"jit entries={est['jit_cache_size']:.0f} "
+          f"padded={est['padded_queries']:.0f}")
+    for b in sorted(srv.engine.bucket_sizes):
+        if f"bucket{b}_chunks" in est:
+            print(f"  bucket {b:3d}: {est[f'bucket{b}_chunks']:4.0f} chunks "
+                  f"p50={est[f'bucket{b}_p50_ms']:.1f}ms "
+                  f"p99={est[f'bucket{b}_p99_ms']:.1f}ms")
     print("OK")
 
 

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative link in README.md + docs/*.md resolves.
+
+``python scripts/check_links.py [root]``
+
+Checks, for each markdown file:
+
+* relative link targets (``[text](path)``) exist on disk, resolved against
+  the file's own directory;
+* fragment links into markdown files (``path.md#anchor`` and in-page
+  ``#anchor``) match a real heading, using GitHub's anchor slug rules
+  (lowercase, punctuation stripped, spaces → hyphens);
+* absolute URLs are left alone (this is a repo-consistency check, not a
+  web crawler).
+
+Exit code 0 when every link resolves; 1 with a per-link report otherwise.
+Stdlib only, so CI can run it without installing anything.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target ends at the first unescaped ')'; images share the
+# syntax (preceded by '!'), which is fine: their paths must resolve too
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+
+
+def anchor_slug(heading: str) -> str:
+    """GitHub-style anchor for a heading (approximation of gfm rules)."""
+    heading = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # links
+    heading = heading.lower()
+    heading = re.sub(r"[^\w\s-]", "", heading)
+    return re.sub(r"\s", "-", heading)
+
+
+def heading_anchors(path: pathlib.Path) -> set:
+    anchors, seen = set(), {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = anchor_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def iter_links(path: pathlib.Path):
+    in_fence = False
+    for ln, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        if _CODE_FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            yield ln, m.group(1)
+
+
+def check_file(path: pathlib.Path) -> list:
+    errors = []
+    for ln, target in iter_links(path):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, …
+            continue
+        target, _, frag = target.partition("#")
+        dest = path if not target else (path.parent / target).resolve()
+        if not dest.exists():
+            errors.append(f"{path}:{ln}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md":
+            if frag not in heading_anchors(dest):
+                errors.append(
+                    f"{path}:{ln}: missing anchor -> {target or dest.name}"
+                    f"#{frag}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    if not any(f.name != "README.md" for f in files):
+        print("FAIL: no docs/*.md found — the docs set is part of the "
+              "acceptance criteria", file=sys.stderr)
+        return 1
+    errors = []
+    n_links = 0
+    for f in files:
+        links = list(iter_links(f))
+        n_links += len(links)
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files, {n_links} links: "
+          f"{'FAIL (%d broken)' % len(errors) if errors else 'all resolve'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

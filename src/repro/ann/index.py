@@ -459,12 +459,38 @@ class AnnIndex:
 
     # -- serving -----------------------------------------------------------
 
-    def serve(self, params: SearchParams = SearchParams(), **engine_kw):
+    def serve(self, params: SearchParams = SearchParams(), *, mesh=None,
+              **engine_kw):
         """A bucketed, jit-cached :class:`repro.serve.AnnEngine` over this
         index (``engine_kw`` forwards e.g. ``bucket_sizes``).
 
         The engine serves the single-host algorithms (bfis | topm |
-        speedann); for the multi-device "sharded" path use
-        :meth:`search`/:meth:`searcher` with a mesh directly."""
+        speedann) and, with ``SearchParams(algorithm="sharded")``, the
+        multi-device walker path — one Speed-ANN walker per device along
+        ``mesh``'s ``model`` axis (``mesh=None``: the default
+        (1, n_devices) search mesh)."""
         from repro.serve.ann_engine import AnnEngine
-        return AnnEngine(self, params, **engine_kw)
+        return AnnEngine(self, params, mesh=mesh, **engine_kw)
+
+    def serve_async(self, params: SearchParams = SearchParams(), *,
+                    max_batch: Optional[int] = None,
+                    max_wait_ms: float = 2.0,
+                    default_deadline_ms: Optional[float] = None,
+                    mesh=None, start: bool = True, **engine_kw):
+        """An async coalescing front-end (:class:`repro.serve.coalescer.
+        AsyncAnnEngine`) over :meth:`serve`: single queries with
+        per-request deadlines in, bucketed batches through the jit cache,
+        per-request futures back.
+
+        ``max_batch`` defaults to the engine's top bucket so a full flush
+        exactly fills the biggest compiled executable.  The wrapped batched
+        engine stays reachable as ``.engine``.
+        """
+        from repro.serve.coalescer import AsyncAnnEngine, CoalescePolicy
+        engine = self.serve(params, mesh=mesh, **engine_kw)
+        policy = CoalescePolicy(
+            max_batch=max_batch if max_batch is not None
+            else engine.bucket_sizes[-1],
+            max_wait_ms=max_wait_ms,
+            default_deadline_ms=default_deadline_ms)
+        return AsyncAnnEngine(engine, policy, start=start)

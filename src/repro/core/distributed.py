@@ -242,6 +242,10 @@ class ShardedIndex(NamedTuple):
     def num_shards(self) -> int:
         return self.nbrs.shape[0]
 
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[-1]
+
 
 def build_partitioned(data: np.ndarray, num_shards: int, degree: int = 24,
                       **nsg_kw) -> ShardedIndex:
@@ -330,3 +334,93 @@ def corpus_sharded_search(
     )
     return fn(index.nbrs, index.vectors, index.medoids, index.offsets,
               queries)
+
+
+# ---------------------------------------------------------------------------
+# Engine-shaped entry points (facade types in, facade types out)
+#
+# The raw shard_map functions above take (PaddedCSR | ShardedIndex,
+# SearchConfig) — the internal plumbing types.  The serving layer speaks
+# AnnIndex + SearchParams, so these adapters let AnnEngine (and anything
+# else engine-shaped) route dispatch through the distributed paths without
+# re-wiring metric normalization, config lowering, or id remapping.
+# ---------------------------------------------------------------------------
+
+def walker_engine_search(index, queries, params, mesh: Optional[Mesh] = None):
+    """Walker-sharded dispatch with facade types: ``AnnIndex`` +
+    ``SearchParams`` in, ``SearchResult`` out.
+
+    Delegates to ``index.searcher(algorithm="sharded")`` so the query
+    normalization (cosine), grouping id remap, and searcher caching are the
+    facade's own — one walker per device along the mesh's ``model`` axis,
+    the query batch sharded over ``data``.  ``mesh=None`` uses the default
+    (1, n_devices) search mesh.
+    """
+    return index.search(queries, params.with_(algorithm="sharded"),
+                        mesh=mesh)
+
+
+def build_partitioned_index(data, num_shards: int, spec=None) -> ShardedIndex:
+    """Corpus partitioning driven by an :class:`repro.ann.IndexSpec`.
+
+    Honors the spec's builder knobs (degree, knn_k, ef_construction, passes,
+    seed) and its metric: for ``cosine`` the corpus is unit-normalized
+    before partitioning (cosine == ip on the unit sphere), matching
+    ``AnnIndex.build``.  Returns a :class:`ShardedIndex` for
+    :func:`corpus_sharded_search` / :func:`corpus_engine_searcher`.
+    """
+    from repro.ann.spec import IndexSpec
+    from repro.core.build import normalize_rows
+    if spec is None:
+        spec = IndexSpec()
+    if spec.quant.enabled:
+        raise ValueError("quantized storage is not wired into the "
+                         "corpus-sharded path; use IndexSpec(quant='none')")
+    data = np.asarray(data, np.float32)
+    if spec.metric == "cosine":
+        data = normalize_rows(data)
+    build_metric = "l2" if spec.metric == "cosine" else spec.metric
+    return build_partitioned(
+        data, num_shards, degree=spec.degree, knn_k=spec.resolved_knn_k,
+        alpha=spec.alpha, ef_construction=spec.resolved_ef,
+        passes=spec.passes, seed=spec.seed, metric=build_metric)
+
+
+def corpus_engine_searcher(index: ShardedIndex, params, mesh: Mesh,
+                           metric: str = "l2"):
+    """A batched callable ``fn(queries (B, d)) -> (ids, dists, stats)`` over
+    a partitioned corpus — the corpus-sharded analogue of
+    ``AnnIndex.searcher``, shaped for the serving engine.
+
+    Each ``model`` device searches its own partition with a sequential
+    best-first walker (top-M with M=1 — walker parallelism within a shard
+    composes via a 3D mesh instead) and the global top-K is merged across
+    shards.  Queries are unit-normalized here for ``metric="cosine"``.
+    ``stats`` is a zero-filled :class:`SearchStats` batched over B: per-query
+    counters do not cross the shard merge.
+    """
+    cfg = params.to_search_config(metric).with_(m_max=1, staged=False,
+                                                num_walkers=1)
+    normalize = metric == "cosine"
+
+    @jax.jit
+    def jitted(nbrs, vectors, medoids, offsets, q):
+        idx = ShardedIndex(nbrs=nbrs, vectors=vectors, medoids=medoids,
+                           offsets=offsets)
+        q = q.astype(jnp.float32)
+        if normalize:
+            q = q / jnp.maximum(
+                jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+        ids, dists = corpus_sharded_search(idx, q, cfg, mesh)
+        zero = jnp.zeros((q.shape[0],), jnp.int32)
+        stats = jax.tree.map(lambda _: zero, SearchStats.zero())
+        return ids, dists, stats
+
+    def fn(queries):
+        q = jnp.asarray(queries)
+        if q.ndim != 2:
+            raise ValueError(f"queries must be (B, d), got {q.shape}")
+        return jitted(index.nbrs, index.vectors, index.medoids,
+                      index.offsets, q)
+
+    return fn

@@ -1,3 +1,7 @@
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.ann_engine import AnnEngine, ServeResult  # noqa: F401
+from repro.serve.coalescer import AsyncAnnEngine  # noqa: F401
+from repro.serve.coalescer import AsyncServeResult  # noqa: F401
+from repro.serve.coalescer import CoalescePolicy  # noqa: F401
+from repro.serve.coalescer import DeadlineExceeded  # noqa: F401
 from repro.serve.knnlm import KNNLMDatastore, knnlm_logits  # noqa: F401

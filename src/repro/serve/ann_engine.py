@@ -1,4 +1,4 @@
-"""Batched ANN serving engine: bucketed shapes + jit-cache reuse.
+"""Batched ANN serving engine: bucketed shapes + jit-cache reuse + sharding.
 
 Online vector-search traffic arrives as variable-size query batches, but jit
 compiles one executable per input shape — naive serving recompiles on every
@@ -23,17 +23,34 @@ with ``IndexSpec(quant=...)``), and the two-stage re-ranked search
 (``SearchParams.rerank_k``).  The legacy ``(PaddedCSR, SearchConfig)`` form
 keeps working.
 
+Three dispatch modes (``engine.mode``), one ``search()`` API:
+
+* ``"single"`` — single-host algorithms (bfis | topm | speedann), the
+  default.
+* ``"sharded"`` — ``SearchParams(algorithm="sharded")`` on the facade path
+  routes every bucket through ``core/distributed.walker_sharded_search``:
+  one Speed-ANN walker per device along the mesh's ``model`` axis (the
+  paper's intra-query parallelism, cross-device).  Pass ``mesh=`` or get
+  the default (1, n_devices) search mesh.
+* ``"corpus"`` — construct with a ``core/distributed.ShardedIndex`` (see
+  ``build_partitioned_index``) + SearchParams + mesh: each ``model`` device
+  searches its own corpus partition and the global top-K is merged.
+
+The async request-coalescing front-end (single queries + deadlines in,
+bucketed batches out) lives in :mod:`repro.serve.coalescer`; construct it in
+one step with ``index.serve_async(params)``.
+
 Typical use::
 
     engine = AnnIndex.build(data, spec).serve(params)
     engine.warmup(dim)                  # compile every bucket up front
     res = engine.search(queries)        # (B, d) for any B
-    print(engine.metrics())             # recall / latency / cache counters
+    print(engine.stats())               # recall / latency / cache counters
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +61,7 @@ from repro.ann.spec import SearchParams
 from repro.config import SearchConfig
 from repro.core.bfis import (DistFn, bfis_search_batch, hnsw_search_batch,
                              resolve_dist_fn, search_topm_batch)
+from repro.core.distributed import ShardedIndex, corpus_engine_searcher
 from repro.core.metrics import SearchStats, recall_at_k
 from repro.core.speedann import search_speedann_batch
 
@@ -65,6 +83,13 @@ class ServeResult(NamedTuple):
     buckets: Tuple[int, ...]  # bucket(s) the request was quantized to
 
 
+def _mesh_data_size(mesh) -> int:
+    """Size of the mesh's query-sharding axis (1 when absent)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get("data", 1))
+
+
 class AnnEngine:
     """Bucketed, jit-cached batched ANN serving on a fixed index."""
 
@@ -76,16 +101,48 @@ class AnnEngine:
         algorithm: Optional[str] = None,
         bucket_sizes: Sequence[int] = DEFAULT_BUCKETS,
         dist_fn: Optional[DistFn] = None,
+        mesh=None,
+        metric: Optional[str] = None,
     ):
         self.index: Optional[AnnIndex] = None
+        self.mesh = mesh
+        self.mode = "single"
         self._normalize = False
         self._old_from_new = None
+        self._corpus_fn = None
+
+        if isinstance(graph, ShardedIndex):
+            # corpus-sharded mode: one partition per device on the mesh's
+            # model axis, global top-K merge across shards
+            if not isinstance(cfg, SearchParams):
+                raise ValueError(
+                    "corpus-sharded serving takes SearchParams (the "
+                    "ShardedIndex has no legacy SearchConfig path)")
+            if mesh is None:
+                raise ValueError(
+                    "corpus-sharded serving needs an explicit mesh whose "
+                    "'model' axis size equals index.num_shards "
+                    "(see core.distributed.make_search_mesh)")
+            if algorithm not in (None, "sharded"):
+                raise ValueError(
+                    "a ShardedIndex serves only the sharded dispatch; drop "
+                    f"algorithm={algorithm!r}")
+            self.mode = "corpus"
+            self.params = cfg
+            self.algorithm = "sharded"
+            self.cfg = cfg.to_search_config(metric or "l2")
+            self.graph = graph
+            self._corpus_fn = corpus_engine_searcher(
+                graph, cfg, mesh, metric=metric or "l2")
+            self._finish_init(bucket_sizes)
+            return
+
         if isinstance(graph, AnnIndex):
             self.index = graph
             graph = self.index.graph
             self._normalize = self.index.spec.metric == "cosine"
             self._old_from_new = self.index.old_from_new
-        metric = self.index.spec.metric if self.index is not None else None
+        metric = self.index.spec.metric if self.index is not None else metric
         self.params: Optional[SearchParams] = None
         if isinstance(cfg, SearchParams):
             if algorithm is None:
@@ -112,20 +169,23 @@ class AnnEngine:
         if algorithm is None:
             algorithm = "speedann"
         if algorithm == "sharded":
-            raise ValueError(
-                "the batched engine serves single-host algorithms "
-                f"{tuple(_ALGORITHMS)}; for the shard_map walker path use "
-                "AnnIndex.search(queries, params, mesh=...) directly")
-        if algorithm not in _ALGORITHMS:
+            if self.params is None:
+                raise ValueError(
+                    "the legacy (graph, SearchConfig) engine serves the "
+                    f"single-host algorithms {tuple(_ALGORITHMS)}; the "
+                    "shard_map walker path serves through the facade — "
+                    "index.serve(SearchParams(algorithm='sharded'), "
+                    "mesh=...)")
+            # walker-sharded mode: every bucket dispatches through the
+            # facade's sharded searcher (core/distributed.py shard_map)
+            self.mode = "sharded"
+        elif algorithm not in _ALGORITHMS:
             raise ValueError(
                 f"unknown algorithm {algorithm!r}; one of "
                 f"{tuple(_ALGORITHMS)}")
-        if not bucket_sizes:
-            raise ValueError("bucket_sizes must be non-empty")
         self.graph = graph
         self.cfg = cfg
         self.algorithm = algorithm
-        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
         self._dist_fn = self._search = None
         if self.params is None:
             # legacy pipeline only — the facade path serves through
@@ -147,6 +207,23 @@ class AnnEngine:
         self._ofn = (jnp.asarray(self._old_from_new, jnp.int32)
                      if self._old_from_new is not None
                      else jnp.zeros((0,), jnp.int32))
+        self._finish_init(bucket_sizes)
+
+    def _finish_init(self, bucket_sizes: Sequence[int]):
+        if not bucket_sizes:
+            raise ValueError("bucket_sizes must be non-empty")
+        self.bucket_sizes = tuple(sorted(set(int(b) for b in bucket_sizes)))
+        if self.mode in ("sharded", "corpus"):
+            # sharded dispatch splits the padded batch over the mesh's
+            # data axis, so every bucket (every compiled shape) must divide
+            data = _mesh_data_size(self.mesh)
+            bad = [b for b in self.bucket_sizes if b % max(data, 1)]
+            if bad:
+                raise ValueError(
+                    f"bucket sizes {bad} are not divisible by the mesh's "
+                    f"data axis ({data}); sharded serving pads every batch "
+                    "to a bucket, so each bucket must split evenly over "
+                    "the query-sharding axis")
         self._jit_cache: Dict[int, object] = {}
         # serving counters
         self.queries_served = 0
@@ -155,6 +232,9 @@ class AnnEngine:
         self.cache_hits = 0
         self.cache_misses = 0
         self._latencies_ms: list[float] = []
+        # per-chunk latency keyed by the bucket it ran in — how the
+        # coalescing policy's batch-size choices show up in the tail
+        self._bucket_latencies_ms: Dict[int, List[float]] = {}
         self._recall_sum = 0.0
         self._recall_n = 0
 
@@ -169,11 +249,18 @@ class AnnEngine:
         fn = self._jit_cache.get(bucket)
         if fn is None:
             self.cache_misses += 1
+            if self.mode == "corpus":
+                # one shard_map searcher; its inner jax.jit keys on the
+                # padded batch shape, so cache accounting stays exact
+                fn = self._corpus_fn
+                self._jit_cache[bucket] = fn
+                return fn
             if self.params is not None:
-                # every bucket shares the index's ONE cached searcher; its
-                # inner jax.jit keys on the padded batch shape, so cache
-                # accounting per bucket stays exact
-                fn = self.index.searcher(self.params)
+                # every bucket shares the index's ONE cached searcher (in
+                # sharded mode the mesh rides along as part of the
+                # searcher-cache key); its inner jax.jit keys on the padded
+                # batch shape, so cache accounting per bucket stays exact
+                fn = self.index.searcher(self.params, mesh=self.mesh)
                 self._jit_cache[bucket] = fn
                 return fn
             # the graph's arrays enter as jit ARGUMENTS, not closure
@@ -230,12 +317,21 @@ class AnnEngine:
             jax.block_until_ready(self._compiled(b)(q)[0])
             out[b] = time.perf_counter() - t0
         self.cache_hits, self.cache_misses = hits, misses
+        self._bucket_latencies_ms = {}
         return out
 
     # -- serving -----------------------------------------------------------
 
-    def _run_chunk(self, queries: jax.Array) -> Tuple[tuple, int]:
-        """Pad one chunk (chunk size <= top bucket) to its bucket and run."""
+    def _run_chunk(self, queries: jax.Array, record: bool
+                   ) -> Tuple[tuple, int]:
+        """Pad one chunk (chunk size <= top bucket) to its bucket and run.
+
+        With ``record`` the chunk is synced (block_until_ready) and its wall
+        time lands in the per-bucket latency distribution.  Multi-chunk
+        requests pass ``record=False``: blocking between chunks would
+        serialize their dispatch, so they stay pipelined and contribute to
+        the request-level distribution only.
+        """
         b = queries.shape[0]
         bucket = self.bucket_for(b)
         pad = bucket - b
@@ -246,7 +342,12 @@ class AnnEngine:
                 [queries, jnp.broadcast_to(queries[:1],
                                            (pad, queries.shape[1]))])
             self.padded_queries += pad
+        t0 = time.perf_counter()
         ids, dists, stats = self._compiled(bucket)(queries)
+        if record:
+            jax.block_until_ready(ids)
+            self._bucket_latencies_ms.setdefault(bucket, []).append(
+                (time.perf_counter() - t0) * 1e3)
         out = (ids[:b], dists[:b],
                jax.tree.map(lambda t: t[:b], stats))
         return out, bucket
@@ -267,11 +368,14 @@ class AnnEngine:
 
         t0 = time.perf_counter()
         chunks, buckets = [], []
+        single_chunk = bsz <= top
         for lo in range(0, bsz, top):
-            out, bucket = self._run_chunk(queries[lo:lo + top])
+            out, bucket = self._run_chunk(queries[lo:lo + top],
+                                          record=single_chunk)
             chunks.append(out)
             buckets.append(bucket)
-        jax.block_until_ready(chunks[-1][0])
+        if not single_chunk:
+            jax.block_until_ready(chunks[-1][0])
         ms = (time.perf_counter() - t0) * 1e3
 
         if len(chunks) == 1:
@@ -294,11 +398,25 @@ class AnnEngine:
 
     # -- observability -----------------------------------------------------
 
+    @staticmethod
+    def _percentiles(lat: np.ndarray, prefix: str) -> Dict[str, float]:
+        return {
+            f"{prefix}mean_ms": float(lat.mean()),
+            f"{prefix}p50_ms": float(np.percentile(lat, 50)),
+            f"{prefix}p90_ms": float(np.percentile(lat, 90)),
+            f"{prefix}p95_ms": float(np.percentile(lat, 95)),
+            f"{prefix}p99_ms": float(np.percentile(lat, 99)),
+            f"{prefix}max_ms": float(lat.max()),
+        }
+
     def stats(self) -> Dict[str, float]:
         """Serving observability: traffic/jit-cache counters AND the
-        per-request latency distribution (mean, p50/p90/p95/p99, max) —
-        tail percentiles are where quantized backends / re-ranking budgets
-        show up from the serving layer, not in the means."""
+        latency distribution (mean, p50/p90/p95/p99, max) — globally per
+        request AND per bucket size (``bucket{b}_*`` keys), so the effect
+        of batch coalescing on the tail is visible from the stats alone.
+        Per-bucket rows cover single-chunk requests only (oversize chunked
+        requests stay pipelined, see ``_run_chunk``).  Schema documented in
+        docs/serving.md."""
         lat = np.asarray(self._latencies_ms, np.float64)
         out = {
             "queries_served": float(self.queries_served),
@@ -309,14 +427,11 @@ class AnnEngine:
             "cache_misses": float(self.cache_misses),
         }
         if lat.size:
-            out.update(
-                latency_mean_ms=float(lat.mean()),
-                latency_p50_ms=float(np.percentile(lat, 50)),
-                latency_p90_ms=float(np.percentile(lat, 90)),
-                latency_p95_ms=float(np.percentile(lat, 95)),
-                latency_p99_ms=float(np.percentile(lat, 99)),
-                latency_max_ms=float(lat.max()),
-            )
+            out.update(self._percentiles(lat, "latency_"))
+        for b in sorted(self._bucket_latencies_ms):
+            bl = np.asarray(self._bucket_latencies_ms[b], np.float64)
+            out[f"bucket{b}_chunks"] = float(bl.size)
+            out.update(self._percentiles(bl, f"bucket{b}_"))
         if self._recall_n:
             out["recall_at_k"] = self._recall_sum / self._recall_n
         return out

@@ -1,0 +1,342 @@
+"""Async request coalescing for ANN serving: single queries in, buckets out.
+
+The batched :class:`~repro.serve.ann_engine.AnnEngine` already amortizes jit
+compilation across fluctuating *batch* traffic; real online traffic, though,
+arrives as SINGLE queries, each with its own latency budget.  This module is
+the layer between the two: an async request queue that
+
+* accepts one query at a time (``submit`` returns a
+  :class:`concurrent.futures.Future` immediately — callers never block the
+  dispatcher),
+* coalesces pending requests into batches under a **max-batch / max-wait**
+  policy (:class:`CoalescePolicy`): a batch is flushed as soon as
+  ``max_batch`` requests are pending OR the oldest pending request has
+  waited ``max_wait_ms``, whichever comes first,
+* forms batches in **earliest-deadline-first** order and rejects requests
+  whose deadline has already expired at dispatch time
+  (:class:`DeadlineExceeded` — cheaper than serving an answer nobody is
+  waiting for),
+* dispatches through the engine's bucketed jit cache
+  (``AnnEngine.search``), so a coalesced batch of any size hits an
+  already-compiled executable, and
+* slices the batched result back into per-request futures.
+
+Coalescing is *transparent*: the per-query lanes of the batched searcher are
+independent (vmap), so a query served in a coalesced batch returns results
+bit-identical to the same query through ``AnnIndex.search`` — pinned by
+``tests/test_coalescer.py``.
+
+Typical use::
+
+    engine = index.serve(params)                 # batched AnnEngine
+    with AsyncAnnEngine(engine, CoalescePolicy(max_batch=16,
+                                               max_wait_ms=2.0)) as srv:
+        futs = [srv.submit(q, deadline_ms=50.0) for q in queries]
+        for f in futs:
+            res = f.result()                     # AsyncServeResult
+            print(res.ids, res.queue_wait_ms, res.batch_size)
+    print(srv.stats())                           # coalescing observability
+
+Or in one step from the facade: ``index.serve_async(params, max_batch=16)``.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, NamedTuple, Optional
+
+import numpy as np
+
+__all__ = ["CoalescePolicy", "DeadlineExceeded", "AsyncServeResult",
+           "AsyncAnnEngine"]
+
+
+class CoalescePolicy(NamedTuple):
+    """Batch-formation policy: flush on size OR age, whichever first.
+
+    * ``max_batch`` — flush as soon as this many requests are pending.
+      Usually set to the engine's top bucket so a full flush hits the
+      biggest compiled executable exactly.
+    * ``max_wait_ms`` — flush when the OLDEST pending request has waited
+      this long, even if the batch is not full.  This bounds the queueing
+      delay added by coalescing: a lone request is served at most
+      ``max_wait_ms`` after arrival.
+    * ``default_deadline_ms`` — deadline applied to requests submitted
+      without one (None = no deadline: the request never expires).
+    """
+    max_batch: int = 32
+    max_wait_ms: float = 2.0
+    default_deadline_ms: Optional[float] = None
+
+
+class DeadlineExceeded(Exception):
+    """The request's deadline expired before dispatch; its future receives
+    this exception instead of a result."""
+
+
+class AsyncServeResult(NamedTuple):
+    """Per-request result, sliced out of the coalesced batch."""
+    ids: np.ndarray          # (k,) int32
+    dists: np.ndarray        # (k,) float32
+    queue_wait_ms: float     # time spent queued before dispatch
+    batch_size: float        # true size of the coalesced batch served with
+    latency_ms: float        # engine wall clock for the whole batch
+    done_t: float            # perf_counter seconds when the result was
+    #                          resolved — client-observed latency is
+    #                          ``done_t - submit-side perf_counter`` (do NOT
+    #                          clock future callbacks: waiters wake BEFORE
+    #                          done-callbacks run)
+
+
+class _Pending(NamedTuple):
+    """One queued request.  Sort key = (deadline, seq): earliest deadline
+    first, FIFO among equal deadlines (seq is the admission counter)."""
+    seq: int
+    query: np.ndarray        # (d,)
+    enqueue_t: float         # perf_counter seconds
+    deadline_t: Optional[float]   # absolute perf_counter seconds, or None
+    future: Future
+
+    @property
+    def sort_key(self):
+        d = self.deadline_t if self.deadline_t is not None else float("inf")
+        return (d, self.seq)
+
+
+def select_batch(pending: List[_Pending], now: float, max_batch: int
+                 ) -> tuple:
+    """Pure batch-formation step (unit-testable without threads).
+
+    Splits ``pending`` into (batch, expired, rest): the up-to-``max_batch``
+    most urgent live requests in earliest-deadline-first order, the requests
+    whose deadline has already passed at ``now``, and the remainder (still
+    queued, in arrival order).
+    """
+    expired = [p for p in pending
+               if p.deadline_t is not None and p.deadline_t < now]
+    live = sorted((p for p in pending
+                   if p.deadline_t is None or p.deadline_t >= now),
+                  key=lambda p: p.sort_key)
+    batch, rest = live[:max_batch], live[max_batch:]
+    rest.sort(key=lambda p: p.seq)
+    return batch, expired, rest
+
+
+class AsyncAnnEngine:
+    """Async coalescing front-end over a batched serving engine.
+
+    ``engine`` is anything with ``search(queries (B, d)) -> ServeResult``
+    and a ``cfg.k`` — in practice an :class:`~repro.serve.AnnEngine` in any
+    of its modes (single-host, walker-sharded, corpus-sharded), so the
+    coalescer composes with sharding for free.
+
+    With ``start=False`` no dispatcher thread runs and batches are formed
+    only by explicit :meth:`flush` calls — deterministic, for tests and for
+    callers that drive their own event loop.
+    """
+
+    def __init__(self, engine, policy: CoalescePolicy = CoalescePolicy(), *,
+                 start: bool = True):
+        if policy.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if policy.max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+        self.engine = engine
+        self.policy = policy
+        self._pending: List[_Pending] = []
+        self._lock = threading.Condition()
+        self._seq = itertools.count()
+        self._closed = False
+        # observability
+        self.submitted = 0
+        self.served = 0
+        self.rejected_deadline = 0
+        self.cancelled = 0
+        self.batches_dispatched = 0
+        self._batch_sizes: List[int] = []
+        self._queue_waits_ms: List[float] = []
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self._thread = threading.Thread(
+                target=self._dispatch_loop, name="ann-coalescer", daemon=True)
+            self._thread.start()
+
+    # -- client side ---------------------------------------------------------
+
+    def submit(self, query, *, deadline_ms: Optional[float] = None) -> Future:
+        """Enqueue one query ``(d,)`` (or ``(1, d)``); returns a Future that
+        resolves to an :class:`AsyncServeResult` — or raises
+        :class:`DeadlineExceeded` if the deadline expires before dispatch.
+
+        ``deadline_ms`` is relative to NOW (submission time); it bounds
+        QUEUE time, not total time — a request dispatched just inside its
+        deadline still runs to completion.
+        """
+        q = np.asarray(query, np.float32)
+        if q.ndim == 2 and q.shape[0] == 1:
+            q = q[0]
+        if q.ndim != 1:
+            raise ValueError(
+                f"submit takes ONE query (d,); got shape {q.shape} — "
+                "for ready-made batches call engine.search directly")
+        if deadline_ms is None:
+            deadline_ms = self.policy.default_deadline_ms
+        now = time.perf_counter()
+        fut: Future = Future()
+        item = _Pending(
+            seq=next(self._seq), query=q, enqueue_t=now,
+            deadline_t=None if deadline_ms is None
+            else now + deadline_ms / 1e3,
+            future=fut)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("AsyncAnnEngine is closed")
+            self._pending.append(item)
+            self.submitted += 1
+            self._lock.notify_all()
+        return fut
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _oldest_age_s(self, now: float) -> float:
+        return now - min(p.enqueue_t for p in self._pending)
+
+    def _dispatch_loop(self):
+        max_wait_s = self.policy.max_wait_ms / 1e3
+        while True:
+            with self._lock:
+                while not self._pending and not self._closed:
+                    self._lock.wait()
+                if self._closed and not self._pending:
+                    return
+                # flush when full, else sleep out the oldest request's
+                # remaining wait budget (new arrivals re-notify)
+                now = time.perf_counter()
+                if (len(self._pending) < self.policy.max_batch
+                        and self._oldest_age_s(now) < max_wait_s
+                        and not self._closed):
+                    self._lock.wait(max_wait_s - self._oldest_age_s(now))
+                    continue
+            self._flush_once()
+
+    def flush(self) -> int:
+        """Synchronously dispatch pending requests (one batch per call
+        until the queue is empty); returns the number of requests resolved.
+        The deterministic path for ``start=False`` engines and tests."""
+        n = 0
+        while True:
+            served = self._flush_once()
+            if served == 0:
+                return n
+            n += served
+
+    def _flush_once(self) -> int:
+        with self._lock:
+            if not self._pending:
+                return 0
+            now = time.perf_counter()
+            batch, expired, rest = select_batch(
+                self._pending, now, self.policy.max_batch)
+            self._pending = rest
+        resolved = 0
+        # set_running_or_notify_cancel guards every resolution: a future the
+        # CLIENT cancelled while it was queued must be dropped, not written
+        # to — set_result on a cancelled future raises InvalidStateError,
+        # which would kill the dispatcher thread and hang every later caller
+        for p in expired:
+            resolved += 1
+            if p.future.set_running_or_notify_cancel():
+                with self._lock:
+                    self.rejected_deadline += 1
+                p.future.set_exception(DeadlineExceeded(
+                    f"deadline expired {1e3 * (now - p.deadline_t):.2f} ms "
+                    "before dispatch"))
+            else:
+                with self._lock:
+                    self.cancelled += 1
+        live = []
+        for p in batch:
+            if p.future.set_running_or_notify_cancel():
+                live.append(p)       # now RUNNING: cancel() can no longer win
+            else:
+                resolved += 1
+                with self._lock:
+                    self.cancelled += 1
+        if not live:
+            return resolved
+        queries = np.stack([p.query for p in live])
+        try:
+            res = self.engine.search(queries)
+        except Exception as e:  # noqa: BLE001 - failure goes to the callers
+            for p in live:
+                p.future.set_exception(e)
+            return resolved + len(live)
+        done_t = time.perf_counter()
+        with self._lock:
+            self.batches_dispatched += 1
+            self._batch_sizes.append(len(live))
+            self.served += len(live)
+            waits = [(now - p.enqueue_t) * 1e3 for p in live]
+            self._queue_waits_ms.extend(waits)
+        for i, p in enumerate(live):
+            p.future.set_result(AsyncServeResult(
+                ids=res.ids[i], dists=res.dists[i],
+                queue_wait_ms=waits[i], batch_size=float(len(live)),
+                latency_ms=res.latency_ms, done_t=done_t))
+        return resolved + len(live)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self, drain: bool = True):
+        """Stop accepting requests; by default drain the queue first.  With
+        ``drain=False`` still-queued futures are cancelled."""
+        with self._lock:
+            self._closed = True
+            if not drain:
+                for p in self._pending:
+                    p.future.cancel()
+                self._pending = []
+            self._lock.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        elif drain:
+            self.flush()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        """Coalescing-level counters + queue-wait distribution.  The wrapped
+        engine's own ``stats()`` (per-bucket latency percentiles, jit-cache
+        counters) stays separate under ``self.engine.stats()``."""
+        with self._lock:
+            sizes = np.asarray(self._batch_sizes, np.float64)
+            waits = np.asarray(self._queue_waits_ms, np.float64)
+            out = {
+                "submitted": float(self.submitted),
+                "served": float(self.served),
+                "rejected_deadline": float(self.rejected_deadline),
+                "cancelled": float(self.cancelled),
+                "pending": float(len(self._pending)),
+                "batches_dispatched": float(self.batches_dispatched),
+            }
+        if sizes.size:
+            out.update(batch_size_mean=float(sizes.mean()),
+                       batch_size_max=float(sizes.max()))
+        if waits.size:
+            out.update(
+                queue_wait_mean_ms=float(waits.mean()),
+                queue_wait_p50_ms=float(np.percentile(waits, 50)),
+                queue_wait_p95_ms=float(np.percentile(waits, 95)),
+                queue_wait_p99_ms=float(np.percentile(waits, 99)),
+            )
+        return out

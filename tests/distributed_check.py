@@ -13,13 +13,16 @@ import jax                                        # noqa: E402
 import jax.numpy as jnp                           # noqa: E402
 import numpy as np                                # noqa: E402
 
+from repro.ann import AnnIndex, IndexSpec, SearchParams  # noqa: E402
 from repro.config import SearchConfig             # noqa: E402
 from repro.core import build_nsg, recall_at_k, search_speedann_batch  # noqa: E402
 from repro.core.distributed import (build_partitioned,                # noqa: E402
+                                    build_partitioned_index,
                                     corpus_sharded_search,
                                     make_search_mesh,
                                     walker_sharded_search)
 from repro.data import make_vector_dataset        # noqa: E402
+from repro.serve import AnnEngine                 # noqa: E402
 
 
 def main():
@@ -71,6 +74,53 @@ def main():
     r3 = recall_at_k(np.asarray(ids3), ds.gt_ids, 10)
     assert r3 >= 0.85, f"3D-mesh recall {r3}"
     print(f"OK mesh3d recall={r3:.3f}")
+
+    # --- engine-shaped serving over the same meshes (facade types in) ---
+    # walker-sharded AnnEngine: bucketed serving where every bucket
+    # dispatches through walker_sharded_search on a REAL multi-device mesh
+    index = AnnIndex.build(ds, IndexSpec(degree=16, knn_k=16,
+                                         ef_construction=32, passes=1))
+    params = SearchParams(k=10, queue_len=64, m_max=4, num_walkers=4,
+                          max_steps=64, local_steps=8, sync_ratio=0.8,
+                          global_rounds=24, algorithm="sharded")
+    engine = index.serve(params, mesh=mesh, bucket_sizes=(2, 4, 8, 16))
+    gt_ids, _ = index.exact(ds.queries, 10)
+    res = engine.search(ds.queries, gt_ids=gt_ids)   # 16 queries: bucket 16
+    st = engine.stats()
+    assert engine.mode == "sharded"
+    assert st["recall_at_k"] >= 0.9, st
+    assert "bucket16_p50_ms" in st
+    print(f"OK walker_engine recall={st['recall_at_k']:.3f} "
+          f"buckets={res.buckets}")
+
+    # odd batch: padded to a bucket divisible by the data axis (2)
+    res5 = engine.search(ds.queries[:5])
+    assert res5.ids.shape == (5, 10) and res5.buckets == (8,)
+    print("OK walker_engine_padding")
+
+    # corpus-sharded AnnEngine on the 4-shard partitioned corpus
+    sharded = build_partitioned_index(
+        ds.base, num_shards=4,
+        spec=IndexSpec(degree=16, knn_k=16, ef_construction=32, passes=1))
+    ce = AnnEngine(sharded, SearchParams(k=10, queue_len=64, max_steps=384),
+                   mesh=mesh, bucket_sizes=(2, 4, 8, 16))
+    rc = ce.search(ds.queries)
+    r4 = recall_at_k(rc.ids, ds.gt_ids, 10)
+    assert ce.mode == "corpus"
+    assert r4 >= 0.9, f"corpus-engine recall {r4}"
+    print(f"OK corpus_engine recall={r4:.3f}")
+
+    # async coalescer over the sharded engine: single submits, exact parity
+    from repro.serve import AsyncAnnEngine, CoalescePolicy
+    srv = AsyncAnnEngine(engine, CoalescePolicy(max_batch=16), start=False)
+    futs = [srv.submit(q) for q in np.asarray(ds.queries[:4])]
+    srv.flush()
+    direct = index.search(ds.queries[:4], params, mesh=mesh)
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(f.result().ids,
+                                      np.asarray(direct.ids)[i])
+    srv.close()
+    print("OK coalescer_over_sharded_engine")
 
     print("ALL_DISTRIBUTED_OK")
 

@@ -194,9 +194,16 @@ def test_serve_hnsw_routes_through_descent(ds, hnsw_idx):
     np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
 
 
-def test_serve_rejects_sharded_with_clear_error(indices):
-    with pytest.raises(ValueError, match="shard_map walker path"):
-        indices["l2"].serve(PARAMS.with_(algorithm="sharded"))
+def test_serve_sharded_goes_through_walker_path(ds, indices, gts):
+    """serve(algorithm="sharded") dispatches through the shard_map walker
+    path (engine mode "sharded") and matches direct sharded search bit for
+    bit; tests/test_coalescer.py pins the recall parity vs single-host."""
+    p = PARAMS.with_(algorithm="sharded", global_rounds=16)
+    engine = indices["l2"].serve(p, bucket_sizes=(4, 8))
+    assert engine.mode == "sharded"
+    res = engine.search(ds.queries[:4])
+    direct = indices["l2"].search(ds.queries[:4], p)
+    np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
 
 
 def test_serve_inherits_metric(ds, indices, gts):

@@ -1,0 +1,246 @@
+"""Async request coalescing + sharded serving: policy, parity, deadlines.
+
+The coalescer must be *transparent* (a query served in a coalesced batch is
+bit-identical to the same query via ``AnnIndex.search``), *ordered*
+(earliest-deadline-first batch formation), and *bounded* (max-wait flush;
+expired requests rejected, not silently served late).  The sharded engine
+mode must match the single-host engine's recall on a 1-device mesh — the
+same code path multi-device meshes run, no special-casing.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.ann import AnnIndex, IndexSpec, SearchParams
+from repro.data import make_vector_dataset
+from repro.serve import AnnEngine, DeadlineExceeded
+from repro.serve.coalescer import _Pending, select_batch
+
+BUCKETS = (1, 2, 4, 8)
+PARAMS = SearchParams(k=10, queue_len=48, m_max=4, num_walkers=4,
+                      max_steps=128, local_steps=4)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("deep", n=1200, n_queries=16, k=10, dim=24,
+                               n_clusters=12, seed=7)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return AnnIndex.build(ds, IndexSpec(degree=12, passes=1))
+
+
+# -- batch formation (pure, no threads) --------------------------------------
+
+def _pending(seq, deadline_t):
+    return _Pending(seq=seq, query=np.zeros(4, np.float32), enqueue_t=0.0,
+                    deadline_t=deadline_t, future=None)
+
+
+def test_select_batch_orders_by_deadline_then_fifo():
+    pend = [_pending(0, 9.0), _pending(1, 3.0), _pending(2, None),
+            _pending(3, 3.0), _pending(4, 1.0)]
+    batch, expired, rest = select_batch(pend, now=0.0, max_batch=3)
+    assert [p.seq for p in batch] == [4, 1, 3]   # EDF; FIFO among ties
+    assert expired == []
+    # remainder keeps arrival order (deadline 9.0 before the deadline-less)
+    assert [p.seq for p in rest] == [0, 2]
+
+
+def test_select_batch_expires_late_requests():
+    pend = [_pending(0, 1.0), _pending(1, 5.0), _pending(2, None)]
+    batch, expired, rest = select_batch(pend, now=2.0, max_batch=8)
+    assert [p.seq for p in expired] == [0]
+    assert [p.seq for p in batch] == [1, 2]      # None sorts last
+    assert rest == []
+
+
+# -- coalesced serving: parity ------------------------------------------------
+
+def test_coalesced_query_bit_identical_to_direct_search(ds, index):
+    """THE transparency pin: single queries submitted separately, coalesced
+    into one batch, return per-request results bit-identical to the same
+    queries through AnnIndex.search — coalescing never changes answers."""
+    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS)
+    futs = [srv.submit(q) for q in ds.queries[:6]]
+    assert srv.flush() == 6
+    direct = index.search(ds.queries[:6], PARAMS)
+    for i, f in enumerate(futs):
+        res = f.result(timeout=0)
+        np.testing.assert_array_equal(res.ids, np.asarray(direct.ids)[i])
+        np.testing.assert_array_equal(res.dists, np.asarray(direct.dists)[i])
+        assert res.batch_size == 6.0
+    st = srv.stats()
+    assert st["served"] == 6 and st["batches_dispatched"] == 1
+    srv.close()
+
+
+def test_single_vs_batched_submission_parity(ds, index):
+    """A query alone in its batch == the same query coalesced with others
+    (vmap lanes are independent)."""
+    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS)
+    alone = srv.submit(ds.queries[0])
+    srv.flush()
+    futs = [srv.submit(q) for q in ds.queries[:5]]
+    srv.flush()
+    np.testing.assert_array_equal(alone.result().ids, futs[0].result().ids)
+    assert alone.result().batch_size == 1.0
+    assert futs[0].result().batch_size == 5.0
+    srv.close()
+
+
+# -- coalescing policy ---------------------------------------------------------
+
+def test_max_batch_splits_flushes(ds, index):
+    srv = index.serve_async(PARAMS, start=False, max_batch=4,
+                            bucket_sizes=BUCKETS)
+    futs = [srv.submit(q) for q in ds.queries[:10]]
+    assert srv.flush() == 10
+    st = srv.stats()
+    assert st["batches_dispatched"] == 3         # 4 + 4 + 2
+    assert st["batch_size_max"] == 4.0
+    assert all(f.result().batch_size <= 4 for f in futs)
+    srv.close()
+
+
+def test_max_wait_flushes_partial_batch(ds, index):
+    """A lone request is served ~max_wait_ms after arrival even though the
+    batch never fills — the dispatcher thread's own clock, no flush() call."""
+    with index.serve_async(PARAMS, max_batch=64, max_wait_ms=10.0,
+                           bucket_sizes=BUCKETS) as srv:
+        t0 = time.perf_counter()
+        fut = srv.submit(ds.queries[0])
+        res = fut.result(timeout=30)
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+    assert res.ids.shape == (PARAMS.k,)
+    assert res.queue_wait_ms >= 9.0              # waited for the batch
+    assert elapsed_ms < 30_000
+
+
+def test_expired_deadline_rejected_not_served(ds, index):
+    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS)
+    dead = srv.submit(ds.queries[0], deadline_ms=0.0)
+    live = srv.submit(ds.queries[1], deadline_ms=10_000.0)
+    time.sleep(0.005)                            # let the deadline lapse
+    srv.flush()
+    with pytest.raises(DeadlineExceeded):
+        dead.result(timeout=0)
+    assert live.result(timeout=0).ids.shape == (PARAMS.k,)
+    st = srv.stats()
+    assert st["rejected_deadline"] == 1 and st["served"] == 1
+    srv.close()
+
+
+def test_client_cancel_does_not_kill_dispatch(ds, index):
+    """A client cancelling its queued future must not poison the batch:
+    set_result on a cancelled future raises InvalidStateError, which would
+    kill the dispatcher thread — the coalescer claims futures with
+    set_running_or_notify_cancel before resolving them."""
+    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS)
+    gone = srv.submit(ds.queries[0])
+    kept = [srv.submit(q) for q in ds.queries[1:4]]
+    assert gone.cancel()                         # still queued: cancellable
+    srv.flush()
+    for f in kept:                               # the rest of the batch
+        assert f.result(timeout=0).ids.shape == (PARAMS.k,)   # still served
+    assert gone.cancelled()
+    st = srv.stats()
+    assert st["cancelled"] == 1 and st["served"] == 3
+    # a dispatched (RUNNING) future can no longer be cancelled
+    assert not kept[0].cancel()
+    srv.close()
+
+
+def test_close_drains_queue(ds, index):
+    srv = index.serve_async(PARAMS, max_batch=64, max_wait_ms=10_000.0,
+                            bucket_sizes=BUCKETS)
+    futs = [srv.submit(q) for q in ds.queries[:3]]
+    srv.close()                                  # drain=True default
+    for f in futs:
+        assert f.result(timeout=0).ids.shape == (PARAMS.k,)
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(ds.queries[0])
+
+
+def test_policy_validation(index):
+    with pytest.raises(ValueError, match="max_batch"):
+        index.serve_async(PARAMS, max_batch=0)
+    srv = index.serve_async(PARAMS, start=False)
+    with pytest.raises(ValueError, match="ONE query"):
+        srv.submit(np.zeros((3, 4), np.float32))
+    srv.close()
+
+
+# -- sharded engine mode -------------------------------------------------------
+
+def test_sharded_engine_matches_single_host_recall(ds, index):
+    """The walker-sharded engine mode on a 1-device mesh passes the same
+    recall bar as the single-host engine, through the same serve() API."""
+    gt, _ = index.exact(ds.queries, 10)
+    single = index.serve(PARAMS, bucket_sizes=BUCKETS)
+    sharded = index.serve(
+        PARAMS.with_(algorithm="sharded", global_rounds=16),
+        bucket_sizes=BUCKETS)
+    assert sharded.mode == "sharded"
+    r1 = single.search(ds.queries, gt_ids=gt)
+    r2 = sharded.search(ds.queries, gt_ids=gt)
+    assert r1.ids.shape == r2.ids.shape
+    s1, s2 = single.stats(), sharded.stats()
+    assert s1["recall_at_k"] >= 0.9
+    assert s2["recall_at_k"] >= 0.9
+    assert s2["jit_cache_size"] >= 1
+
+
+def test_sharded_engine_through_coalescer(ds, index):
+    """Coalescing composes with sharded dispatch: submitted single queries
+    match the sharded engine's own batched results bit for bit."""
+    p = PARAMS.with_(algorithm="sharded", global_rounds=16)
+    srv = index.serve_async(p, start=False, bucket_sizes=BUCKETS)
+    assert srv.engine.mode == "sharded"
+    futs = [srv.submit(q) for q in ds.queries[:4]]
+    srv.flush()
+    direct = index.search(ds.queries[:4], p)
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(f.result().ids,
+                                      np.asarray(direct.ids)[i])
+    srv.close()
+
+
+def test_legacy_graph_engine_still_rejects_sharded(ds, index):
+    from repro.config import SearchConfig
+    with pytest.raises(ValueError, match="facade"):
+        AnnEngine(index.graph, SearchConfig(k=10), algorithm="sharded")
+
+
+def test_corpus_engine_recall_on_one_device_mesh(ds):
+    """Corpus-sharded serving (partitioned corpus, global top-K merge)
+    through the engine API on a 1-device mesh."""
+    from repro.core.distributed import (build_partitioned_index,
+                                        make_search_mesh)
+    spec = IndexSpec(degree=12, passes=1)
+    sharded = build_partitioned_index(ds.base, num_shards=1, spec=spec)
+    mesh = make_search_mesh((1, 1), ("data", "model"))
+    eng = AnnEngine(sharded, PARAMS.with_(queue_len=64, max_steps=256),
+                    mesh=mesh, bucket_sizes=BUCKETS)
+    assert eng.mode == "corpus"
+    gt_ids = None
+    res = eng.search(ds.queries, gt_ids=gt_ids)
+    from repro.core import recall_at_k
+    assert recall_at_k(res.ids, ds.gt_ids, 10) >= 0.9
+
+
+def test_per_bucket_latency_stats(ds, index):
+    engine = index.serve(PARAMS, bucket_sizes=BUCKETS)
+    engine.search(ds.queries[:3])                # bucket 4
+    engine.search(ds.queries[:3])
+    engine.search(ds.queries[:8])                # bucket 8
+    st = engine.stats()
+    assert st["bucket4_chunks"] == 2.0
+    assert st["bucket8_chunks"] == 1.0
+    for b in (4, 8):
+        assert st[f"bucket{b}_p50_ms"] <= st[f"bucket{b}_p99_ms"] + 1e-9
+        assert st[f"bucket{b}_p99_ms"] <= st[f"bucket{b}_max_ms"] + 1e-9
+    assert "bucket1_chunks" not in st            # untouched bucket: no keys
