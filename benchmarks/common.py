@@ -143,6 +143,42 @@ def merge_trajectory_rows(out_path: str, new_rows: list,
     return [r for r in existing if not drop(r)] + new_rows
 
 
+def write_trajectory(out_path: str, bench: str, new_rows: list,
+                     row_key: Callable[[Dict], tuple],
+                     config: Optional[Dict] = None,
+                     superseded: Optional[Callable] = None) -> Dict:
+    """Merge ``new_rows`` into the trajectory at ``out_path`` and write the
+    standard payload (bench / config / platform / jax / unix_time / rows).
+
+    ``config`` defaults to the existing file's config block (sweeps that
+    add rows without changing scale, e.g. --sweep-batch, leave the latest
+    full-sweep config in place)."""
+    import platform as _platform
+
+    import jax as _jax
+    if config is None:
+        try:
+            with open(out_path) as f:
+                config = json.load(f).get("config", {})
+        except (OSError, json.JSONDecodeError):
+            config = {}
+    all_rows = merge_trajectory_rows(out_path, new_rows, row_key,
+                                     superseded=superseded)
+    payload = {
+        "bench": bench,
+        "config": config,
+        "platform": _platform.machine(),
+        "jax": _jax.__version__,
+        "unix_time": time.time(),
+        "rows": all_rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path} ({len(new_rows)} new rows, "
+          f"{len(all_rows)} total in trajectory)")
+    return payload
+
+
 def modeled_parallel_us(us: float, stats: dict) -> float:
     """W-core latency model: expansions are the unit of work; walkers run
     rounds in parallel, so latency ≈ wall_us × crit_rounds / expansions."""

@@ -18,17 +18,15 @@ measure the emulation, not Mosaic.
 """
 from __future__ import annotations
 
-import json
 import platform
 import time
 from typing import Dict
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (dataset, merge_trajectory_rows, nsg_index,
-                               time_batched)
+from benchmarks.common import (dataset, nsg_index, time_batched,
+                               write_trajectory)
 from repro.ann import SearchParams
 from repro.core import recall_at_k
 from repro.kernels import available_backends
@@ -45,8 +43,12 @@ RERANK_K = 2 * K
 
 
 def _row_key(row: Dict) -> tuple:
-    """Identity of a trajectory row: same key ⇒ newer run supersedes."""
-    return (row.get("searcher"), row.get("backend"),
+    """Identity of a trajectory row: same key ⇒ newer run supersedes.
+
+    ``batch`` distinguishes the --sweep-batch rows (one per batch size B)
+    from the plain backend rows (no batch key ⇒ None), so both families
+    accumulate side by side in the same trajectory file."""
+    return (row.get("searcher"), row.get("backend"), row.get("batch"),
             row.get("host", "<unknown>"), row.get("interpret"))
 
 
@@ -116,22 +118,11 @@ def sweep(out_path: str = "BENCH_dist_backend.json", n: int = 2000,
                   f"quant={quant};"
                   f"ids_match_ref={row['ids_match_ref']}")
 
-    all_rows = merge_trajectory_rows(out_path, rows, _row_key,
-                                     superseded=_hostless_superseded)
-    payload = {
-        "bench": "dist_backend",
-        "config": {"n": n, "q": q, "k": K, "m_max": BASE.m_max,
-                   "queue_len": BASE.queue_len, "dma_group": BASE.dma_group},
-        "platform": platform.machine(),
-        "jax": jax.__version__,
-        "unix_time": time.time(),
-        "rows": all_rows,
-    }
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2)
-    print(f"# wrote {out_path} ({len(rows)} new rows, "
-          f"{len(all_rows)} total in trajectory)")
-    return payload
+    return write_trajectory(
+        out_path, "dist_backend", rows, _row_key,
+        config={"n": n, "q": q, "k": K, "m_max": BASE.m_max,
+                "queue_len": BASE.queue_len, "dma_group": BASE.dma_group},
+        superseded=_hostless_superseded)
 
 
 if __name__ == "__main__":

@@ -30,11 +30,20 @@ def main() -> None:
                          "(skips the figure suite)")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="output path for --sweep-serve")
+    ap.add_argument("--sweep-batch", action="store_true",
+                    help="batch-amortization sweep of the batch-major "
+                         "engine (B x backend); appends rows to "
+                         "BENCH_dist_backend.json (skips the figure suite)")
     args = ap.parse_args()
 
     if args.sweep_backends:
         from benchmarks import dist_backend
         dist_backend.sweep(args.bench_out)
+        return
+
+    if args.sweep_batch:
+        from benchmarks import batch_sweep
+        batch_sweep.sweep(args.bench_out)
         return
 
     if args.sweep_serve:

@@ -31,6 +31,13 @@ exact float32 re-ranking::
     index = AnnIndex.build(dataset, spec)
     res = index.search(queries, SearchParams(k=10, backend="ref_int8",
                                              rerank_k=30))
+
+Searches are BATCH-MAJOR end to end: a (B, d) query batch advances through
+one traversal loop with one distance-kernel launch per global step (see
+``core.bfis``), so larger batches amortize per-step launch cost.  For
+``metric="ip"``, ``IndexSpec(entry_policy="max_norm")`` seeds traversals at
+the max-norm vertex instead of the centroid medoid (the MIPS entry
+heuristic for skewed-norm distributions).
 """
 from __future__ import annotations
 
@@ -109,6 +116,23 @@ def exact_rerank(graph: PaddedCSR, q: jax.Array, ids: jax.Array, k: int,
     d, ids = jax.lax.sort((d, ids.astype(jnp.int32)), num_keys=2,
                           is_stable=True, dimension=-1)
     return ids[:, :k], d[:, :k]
+
+
+def apply_entry_policy(graph: PaddedCSR, spec: IndexSpec) -> PaddedCSR:
+    """Build-time traversal-entry selection (``IndexSpec.entry_policy``).
+
+    ``"max_norm"`` replaces the medoid with the max-norm vertex — the MIPS
+    seed heuristic: inner-product search converges to a region dominated by
+    large-norm points, so seeding there skips the climb out of the centroid
+    vertex's small-norm neighborhood.  Runs LAST in the build pipeline, on
+    the stored (post-relabelling, post-quantization) vectors, so the entry
+    id is in internal id space and consistent with what searches will see.
+    """
+    if spec.entry_policy != "max_norm":
+        return graph
+    norms = np.linalg.norm(np.asarray(graph.vectors, np.float32), axis=1)
+    return graph._replace(
+        medoid=jnp.asarray(int(np.argmax(norms)), jnp.int32))
 
 
 def quantize_graph(graph: PaddedCSR, quant) -> PaddedCSR:
@@ -212,7 +236,8 @@ class AnnIndex:
                               upper_degree=spec.upper_degree,
                               seed=spec.seed, alpha=spec.alpha,
                               metric=build_metric)
-            base = quantize_graph(hnsw.base, spec.quant)
+            base = apply_entry_policy(
+                quantize_graph(hnsw.base, spec.quant), spec)
             return cls(spec, base, hnsw=hnsw._replace(base=base))
 
         graph = build_nsg(data, degree=spec.degree,
@@ -225,8 +250,8 @@ class AnnIndex:
                 np.asarray(graph.nbrs), np.asarray(graph.vectors),
                 medoid=int(graph.medoid),
                 top_fraction=spec.n_top_fraction)
-        return cls(spec, quantize_graph(graph, spec.quant),
-                   old_from_new=old_from_new)
+        graph = apply_entry_policy(quantize_graph(graph, spec.quant), spec)
+        return cls(spec, graph, old_from_new=old_from_new)
 
     # -- persistence -------------------------------------------------------
 
@@ -243,13 +268,17 @@ class AnnIndex:
         if not path.endswith(".npz"):
             path += ".npz"
         quant = self.spec.quant
-        # unquantized artifacts stay format-1 artifacts END TO END: the
-        # format-1 stamp AND a spec json without the (default) quant key,
-        # so readers that predate quantization load them unchanged
+        # default-valued NEW spec fields are stripped from the json so
+        # artifacts that don't use them stay loadable by readers that
+        # predate the field: unquantized artifacts stay format-1 END TO END
+        # (format-1 stamp AND no quant key), and a default "medoid" entry
+        # policy leaves no entry_policy key
         fmt = _SAVE_FORMAT if self.graph.codes is not None else 1
         spec_dict = dataclasses.asdict(self.spec)
         if not quant.enabled:
             del spec_dict["quant"]
+        if self.spec.entry_policy == "medoid":
+            del spec_dict["entry_policy"]
         arrays = dict(
             format=np.int64(fmt),
             spec=np.asarray(json.dumps(spec_dict)),

@@ -13,7 +13,8 @@ the facade splits them:
 
 Both are frozen dataclasses (hashable ⇒ usable as jit static arguments and
 as searcher-cache keys).  ``SearchParams.to_search_config`` lowers onto the
-legacy :class:`repro.config.SearchConfig`, which remains the internal
+legacy :class:`repro.core.config.SearchConfig` (re-exported from
+``repro.config`` for backward compatibility), which remains the internal
 plumbing type threaded through ``repro.core`` — existing call sites keep
 working unchanged.
 """
@@ -22,12 +23,13 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 
-from repro.config import SearchConfig
+from repro.core.config import SearchConfig
 from repro.quant.scheme import QuantSpec, coerce_quant
 
 BUILDERS = ("nsg", "hnsw")
 METRICS = ("l2", "ip", "cosine")
 ALGORITHMS = ("bfis", "topm", "speedann", "sharded")
+ENTRY_POLICIES = ("medoid", "max_norm")
 
 
 @dataclass(frozen=True)
@@ -47,6 +49,20 @@ class IndexSpec:
     #                              to original ids transparently)
     upper_degree: int = 16       # HNSW upper-level out-degree
     seed: int = 0
+    entry_policy: str = "medoid"  # traversal entry point: "medoid" (NSG's
+    #                              navigating node — closest/most-aligned to
+    #                              the centroid) | "max_norm" (the max-norm
+    #                              vertex; metric="ip" only).  MIPS searches
+    #                              over skewed-norm data converge to a
+    #                              high-inner-product region dominated by
+    #                              large-norm points — seeding there skips
+    #                              the climb out of the centroid's
+    #                              small-norm neighborhood.  Applies to
+    #                              every medoid-seeded search; the one
+    #                              exception is algorithm="bfis" on an
+    #                              hnsw-built index, which enters via the
+    #                              upper-level greedy descent instead (its
+    #                              own MIPS-aware entry path).
     quant: QuantSpec = QuantSpec()  # stored-vector quantization
     #                              (repro.quant): "int8" | "bf16" | "none",
     #                              accepted as a dtype string, QuantSpec, or
@@ -62,6 +78,15 @@ class IndexSpec:
                 f"unknown metric {self.metric!r}; one of {METRICS}")
         if not 0.0 <= self.n_top_fraction <= 1.0:
             raise ValueError("n_top_fraction must be in [0, 1]")
+        if self.entry_policy not in ENTRY_POLICIES:
+            raise ValueError(
+                f"unknown entry_policy {self.entry_policy!r}; one of "
+                f"{ENTRY_POLICIES}")
+        if self.entry_policy == "max_norm" and self.metric != "ip":
+            raise ValueError(
+                "entry_policy='max_norm' is the MIPS seed heuristic; it "
+                "requires metric='ip' (for l2/cosine the medoid is the "
+                "right navigating node)")
         if self.builder == "hnsw" and self.n_top_fraction > 0:
             raise ValueError("neighbor grouping (n_top_fraction) is "
                              "supported for the nsg builder only")

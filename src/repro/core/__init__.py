@@ -1,4 +1,5 @@
 # Speed-ANN core: the paper's contribution as composable JAX modules.
+from repro.core.config import SearchConfig  # noqa: F401
 from repro.core.graph import (PaddedCSR, make_padded_csr, group_by_indegree,  # noqa: F401
                               compute_medoid)
 from repro.core.build import (build_nsg, build_hnsw, exact_knn,  # noqa: F401

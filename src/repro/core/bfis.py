@@ -10,31 +10,40 @@ The full Algorithm 3 (private walker queues + redundant-expansion-aware lazy
 synchronization) lives in ``speedann.py``; this module is both the baseline
 and the building block.
 
-All functions are single-query and meant to be ``jax.vmap``-ed over a query
-batch (a vmapped while_loop runs until the slowest query converges; bodies
-are no-ops for converged queries so counters stay exact).
+**Batch-major engine.**  ``search_topm_batch`` runs ONE ``lax.while_loop``
+over batch-leading state: ``Frontier``/``Visited``/``SearchStats`` all carry
+a leading ``(B,)`` query axis and every global step issues a SINGLE distance
+launch over the whole ``(B, M, R)`` expansion (the workload the Pallas
+kernels amortize).  Converged queries are masked no-ops — the loop body's
+new state is selected per lane against the lane's own liveness predicate,
+which is exactly ``jax.vmap``'s batching rule for ``while_loop``, so the
+batch-major path is bit-identical (ids, dists, stats) to vmapping the
+per-query search.  The per-query entry points (``search_topm``,
+``search_speedann``) remain as thin ``B=1`` wrappers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import SearchConfig
+from repro.core.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
 from repro.core.graph import (PaddedCSR, fetch_neighbor_vectors,
                               gather_neighbor_ids)
 from repro.core.metrics import SearchStats
 
-# dist_fn(graph, active_ids (M,), nbr_ids (M,R), query (d,)) -> (M,R)
-# distances, float32, smaller = closer, +inf for padded ids.  The query is
-# float32; WHICH stored table a backend reads (f32 ``graph.vectors``, int8
-# ``graph.codes`` + ``graph.scales``, bf16 codes) and in what precision it
-# accumulates is the backend's own business — the search algorithms only see
-# the f32 result, so quantized and exact backends are interchangeable here.
+# dist_fn(graph, active_ids (B, M), nbr_ids (B, M, R), queries (B, d))
+# -> (B, M, R) distances, float32, smaller = closer, +inf for padded ids.
+# BATCH-MAJOR contract: one call covers every query's expansion for the
+# step — backends launch ONE kernel over the flattened (B, M·R) candidate
+# grid instead of per-lane gathers.  The queries are float32; WHICH stored
+# table a backend reads (f32 ``graph.vectors``, int8 ``graph.codes`` +
+# ``graph.scales``, bf16 codes) and in what precision it accumulates is the
+# backend's own business — the search algorithms only see the f32 result,
+# so quantized and exact backends are interchangeable here.
 DistFn = Callable[[PaddedCSR, jax.Array, jax.Array, jax.Array], jax.Array]
 
 
@@ -50,15 +59,19 @@ def resolve_dist_fn(cfg: SearchConfig,
 
 
 def dist_l2(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
-            q: jax.Array) -> jax.Array:
-    """Reference squared-L2 distance via the two-level vector fetch."""
+            queries: jax.Array) -> jax.Array:
+    """Reference squared-L2 distance via the two-level vector fetch.
+
+    Leading-dims agnostic: (B, M, R) batch-major ids with (B, d) queries,
+    or (M, R) with (d,) for per-query callers."""
     vecs = fetch_neighbor_vectors(graph, active_ids, nbr_ids)
-    diff = vecs.astype(jnp.float32) - q.astype(jnp.float32)[None, None, :]
+    diff = vecs.astype(jnp.float32) \
+        - queries.astype(jnp.float32)[..., None, None, :]
     return jnp.sum(diff * diff, axis=-1)
 
 
 def dist_ip(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
-            q: jax.Array) -> jax.Array:
+            queries: jax.Array) -> jax.Array:
     """Reference negative-inner-product distance (MIPS; cosine when the
     index vectors and query are pre-normalized).
 
@@ -67,13 +80,13 @@ def dist_ip(graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array,
     arithmetic (inf * 0 -> nan)."""
     vecs = fetch_neighbor_vectors(graph, active_ids, nbr_ids)
     d = -jnp.sum(vecs.astype(jnp.float32)
-                 * q.astype(jnp.float32)[None, None, :], axis=-1)
+                 * queries.astype(jnp.float32)[..., None, None, :], axis=-1)
     return jnp.where(nbr_ids < graph.n_nodes, d, jnp.inf)
 
 
 def make_ref_dist_fn(metric: str = "l2") -> DistFn:
-    """Metric tag -> pure-jnp two-level DistFn ("cosine" == ip: the facade
-    pre-normalizes base vectors and queries)."""
+    """Metric tag -> pure-jnp two-level batch-major DistFn ("cosine" == ip:
+    the facade pre-normalizes base vectors and queries)."""
     if metric in ("ip", "cosine"):
         return dist_ip
     if metric == "l2":
@@ -82,12 +95,61 @@ def make_ref_dist_fn(metric: str = "l2") -> DistFn:
 
 
 def point_dist(v: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
-    """Scalar point-to-query distance used to seed the search frontier."""
+    """Point-to-query distance used to seed the search frontier.
+
+    Leading-dims agnostic: (d,) vectors give a scalar, (B, d) give (B,)."""
     v = v.astype(jnp.float32)
     q = q.astype(jnp.float32)
     if metric in ("ip", "cosine"):
-        return -jnp.dot(v, q)
-    return jnp.sum((v - q) ** 2)
+        return -jnp.sum(v * q, axis=-1)
+    return jnp.sum((v - q) ** 2, axis=-1)
+
+
+def lane_select(alive: jax.Array, new, old):
+    """Per-lane carry masking: where ``alive[b]`` take ``new``, else keep
+    ``old`` — the ``jax.vmap`` while_loop batching rule, applied explicitly
+    by the batch-major engine so converged queries are exact no-ops."""
+    def sel(n, o):
+        pred = alive.reshape(alive.shape + (1,) * (n.ndim - alive.ndim))
+        return jnp.where(pred, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def expand_batch(
+    graph: PaddedCSR,
+    queries: jax.Array,
+    frontier: fq.Frontier,
+    visited: vs.Visited,
+    m_max: int,
+    m: jax.Array | int,
+    dist_fn: DistFn = dist_l2,
+) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
+    """One batch-major neighbor-expansion round (Algorithm 1 lines 6–13,
+    width m, all B queries at once).
+
+    ``frontier``/``visited`` carry a leading (B,) axis; ``m`` may be scalar
+    or per-query (B,).  The ONLY cross-lane fusion is the distance call:
+    one ``dist_fn`` launch covers the whole (B, m_max, R) candidate grid.
+    Returns (frontier', visited', update_positions (B,), n_comps (B,)).
+    """
+    bsz = queries.shape[0]
+    frontier, active_ids, active_valid = fq.select_unchecked_batch(
+        frontier, m_max, m)
+    nbrs = gather_neighbor_ids(graph, active_ids)          # (B, m_max, R)
+    flat = nbrs.reshape(bsz, -1)
+    valid = (flat < graph.n_nodes) \
+        & jnp.repeat(active_valid, graph.degree, axis=-1)
+    visited, fresh = vs.check_and_insert_batch(visited, flat, valid)
+    # the frontier stores f32 keys; normalize here so a backend that reduces
+    # in another precision (int32-accumulated int8, bf16) can't leak its
+    # accumulator dtype into the queue
+    dists = dist_fn(graph, active_ids, nbrs, queries).astype(
+        jnp.float32).reshape(bsz, -1)
+    dists = jnp.where(fresh, dists, jnp.inf)
+    cand_ids = jnp.where(fresh, flat, fq.INVALID_ID)
+    frontier, up_pos, _ = fq.insert_batch(frontier, cand_ids, dists)
+    return frontier, visited, up_pos, \
+        jnp.sum(fresh, axis=-1).astype(jnp.int32)
 
 
 def expand(
@@ -99,7 +161,8 @@ def expand(
     m: jax.Array | int,
     dist_fn: DistFn = dist_l2,
 ) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
-    """One neighbor-expansion round (Algorithm 1 lines 6–13, width m).
+    """Per-query expansion round (the ``core.distributed`` walker building
+    block): lifts the query to a B=1 batch for the batch-major ``dist_fn``.
 
     Returns (frontier', visited', update_position, n_distance_comps).
     """
@@ -109,11 +172,8 @@ def expand(
     flat = nbrs.reshape(-1)
     valid = (flat < graph.n_nodes) & jnp.repeat(active_valid, graph.degree)
     visited, fresh = vs.check_and_insert(visited, flat, valid)
-    # the frontier stores f32 keys; normalize here so a backend that reduces
-    # in another precision (int32-accumulated int8, bf16) can't leak its
-    # accumulator dtype into the queue
-    dists = dist_fn(graph, active_ids, nbrs, q).astype(
-        jnp.float32).reshape(-1)
+    dists = dist_fn(graph, active_ids[None], nbrs[None], q[None])[0]
+    dists = dists.astype(jnp.float32).reshape(-1)
     dists = jnp.where(fresh, dists, jnp.inf)
     cand_ids = jnp.where(fresh, flat, fq.INVALID_ID)
     frontier, up_pos, _ = fq.insert(frontier, cand_ids, dists)
@@ -121,34 +181,95 @@ def expand(
 
 
 class _TopMState(NamedTuple):
-    frontier: fq.Frontier
-    visited: vs.Visited
-    stats: SearchStats
+    frontier: fq.Frontier     # leaves (B, L)
+    visited: vs.Visited       # table (B, ...)
+    stats: SearchStats        # leaves (B,)
 
 
-def _init_state(
-    graph: PaddedCSR, q: jax.Array, cfg: SearchConfig,
-    start: Optional[jax.Array], dist_fn: DistFn,
+def _seed_ids(graph: PaddedCSR, start: Optional[jax.Array],
+              batch: int) -> jax.Array:
+    """(B,) int32 traversal entry points: the medoid (build-time entry
+    policy, e.g. MIPS max-norm — see ``IndexSpec.entry_policy``) unless the
+    caller provides per-query starts."""
+    if start is None:
+        return jnp.broadcast_to(
+            jnp.asarray(graph.medoid, jnp.int32), (batch,))
+    return jnp.broadcast_to(jnp.asarray(start, jnp.int32), (batch,))
+
+
+def _init_state_batch(
+    graph: PaddedCSR, queries: jax.Array, cfg: SearchConfig,
+    start: Optional[jax.Array],
 ) -> _TopMState:
-    frontier = fq.make_frontier(cfg.queue_len)
-    visited = vs.make_visited(cfg.visited_mode, graph.n_nodes, cfg.hash_bits)
-    s = graph.medoid if start is None else start.astype(jnp.int32)
-    visited, _ = vs.check_and_insert(
-        visited, s[None], jnp.ones((1,), bool))
-    v = graph.vectors[s].astype(jnp.float32)
-    d0 = point_dist(v, q, cfg.metric)[None]
-    frontier, _, _ = fq.insert(frontier, s[None], d0)
-    stats = SearchStats.zero()._replace(dist_comps=jnp.int32(1))
+    bsz = queries.shape[0]
+    frontier = fq.make_frontier_batch(cfg.queue_len, bsz)
+    visited = vs.make_visited_batch(cfg.visited_mode, graph.n_nodes, bsz,
+                                    cfg.hash_bits)
+    s = _seed_ids(graph, start, bsz)
+    visited, _ = vs.check_and_insert_batch(
+        visited, s[:, None], jnp.ones((bsz, 1), bool))
+    v = graph.vectors[s].astype(jnp.float32)               # (B, d)
+    d0 = point_dist(v, queries, cfg.metric)[:, None]
+    frontier, _, _ = fq.insert_batch(frontier, s[:, None], d0)
+    stats = SearchStats.zero_batch(bsz)._replace(
+        dist_comps=jnp.ones((bsz,), jnp.int32))
     return _TopMState(frontier, visited, stats)
 
 
 def staged_m(step: jax.Array, cfg: SearchConfig) -> jax.Array:
-    """§4.2 staging function: M doubles every ``stage_every`` steps."""
+    """§4.2 staging function: M doubles every ``stage_every`` steps.
+
+    Elementwise — a (B,) step vector yields per-query widths."""
     if not cfg.staged:
-        return jnp.int32(cfg.m_max)
+        return jnp.broadcast_to(jnp.int32(cfg.m_max), jnp.shape(step))
     expo = jnp.minimum(step // cfg.stage_every, 30).astype(jnp.int32)
     return jnp.minimum(jnp.left_shift(jnp.int32(1), expo),
                        jnp.int32(cfg.m_max))
+
+
+def search_topm_batch(
+    graph: PaddedCSR,
+    queries: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: Optional[DistFn] = None,
+) -> Tuple[jax.Array, jax.Array, SearchStats]:
+    """Batch-major single-queue top-M search over a (B, d) query batch.
+
+    One ``lax.while_loop`` advances every query per iteration (ONE distance
+    launch per global step for the whole batch); converged lanes are masked
+    no-ops, so per-query counters stay exact and results are bit-identical
+    to vmapping :func:`search_topm`.  ``cfg.m_max == 1`` reproduces BFiS /
+    Algorithm 1 exactly.  Returns (ids (B, k), dists (B, k), stats (B,)).
+    """
+    dist_fn = resolve_dist_fn(cfg, dist_fn)
+    st = _init_state_batch(graph, queries, cfg, start)
+
+    def lanes_live(s: _TopMState) -> jax.Array:
+        return fq.has_unchecked_batch(s.frontier) \
+            & (s.stats.steps < cfg.max_steps)
+
+    def cond(s: _TopMState):
+        return jnp.any(lanes_live(s))
+
+    def body(s: _TopMState):
+        alive = lanes_live(s)
+        live = fq.has_unchecked_batch(s.frontier).astype(jnp.int32)
+        m = staged_m(s.stats.steps, cfg)
+        frontier, visited, _, n = expand_batch(
+            graph, queries, s.frontier, s.visited, cfg.m_max, m, dist_fn)
+        stats = s.stats._replace(
+            steps=s.stats.steps + live,
+            local_steps=s.stats.local_steps
+            + jnp.minimum(m, jnp.int32(cfg.m_max)) * live,
+            dist_comps=s.stats.dist_comps + n,
+            crit_rounds=s.stats.crit_rounds + live,
+        )
+        return lane_select(alive, _TopMState(frontier, visited, stats), s)
+
+    st = jax.lax.while_loop(cond, body, st)
+    ids, dists = fq.results_batch(st.frontier, cfg.k)
+    return ids, dists, st.stats
 
 
 def search_topm(
@@ -158,49 +279,14 @@ def search_topm(
     start: Optional[jax.Array] = None,
     dist_fn: Optional[DistFn] = None,
 ) -> Tuple[jax.Array, jax.Array, SearchStats]:
-    """Single-queue top-M parallel-neighbor-expansion search (one query).
-
-    ``cfg.m_max == 1`` reproduces BFiS / Algorithm 1 exactly.
-    Returns (ids (k,), dists (k,), stats).
+    """Single-query top-M search — a thin B=1 wrapper over the batch-major
+    engine.  Returns (ids (k,), dists (k,), stats).
     """
-    dist_fn = resolve_dist_fn(cfg, dist_fn)
-    st = _init_state(graph, q, cfg, start, dist_fn)
-
-    def cond(s: _TopMState):
-        return fq.has_unchecked(s.frontier) & (s.stats.steps < cfg.max_steps)
-
-    def body(s: _TopMState):
-        live = fq.has_unchecked(s.frontier)
-        m = staged_m(s.stats.steps, cfg)
-        frontier, visited, _, n = expand(
-            graph, q, s.frontier, s.visited, cfg.m_max, m, dist_fn)
-        stats = s.stats._replace(
-            steps=s.stats.steps + live.astype(jnp.int32),
-            local_steps=s.stats.local_steps
-            + jnp.minimum(m, jnp.int32(cfg.m_max)) * live.astype(jnp.int32),
-            dist_comps=s.stats.dist_comps + n,
-            crit_rounds=s.stats.crit_rounds + live.astype(jnp.int32),
-        )
-        return _TopMState(frontier, visited, stats)
-
-    st = jax.lax.while_loop(cond, body, st)
-    ids, dists = fq.results(st.frontier, cfg.k)
-    return ids, dists, st.stats
-
-
-def search_topm_batch(
-    graph: PaddedCSR,
-    queries: jax.Array,
-    cfg: SearchConfig,
-    start: Optional[jax.Array] = None,
-    dist_fn: Optional[DistFn] = None,
-):
-    """vmapped ``search_topm`` over a (B, d) query batch."""
-    fn = functools.partial(search_topm, graph, cfg=cfg,
-                           dist_fn=resolve_dist_fn(cfg, dist_fn))
-    if start is None:
-        return jax.vmap(lambda qq: fn(qq))(queries)
-    return jax.vmap(lambda qq, ss: fn(qq, start=ss))(queries, start)
+    start_b = None if start is None \
+        else jnp.asarray(start, jnp.int32).reshape(1)
+    ids, dists, stats = search_topm_batch(
+        graph, q[None, :], cfg, start=start_b, dist_fn=dist_fn)
+    return ids[0], dists[0], jax.tree.map(lambda t: t[0], stats)
 
 
 def bfis_search_batch(graph, queries, cfg: SearchConfig, **kw):
@@ -252,7 +338,9 @@ def greedy_descent(
 
 def hnsw_search_batch(index, queries: jax.Array, cfg: SearchConfig,
                       dist_fn: Optional[DistFn] = None):
-    """HNSW baseline: greedy descent through upper levels, BFiS at level 0."""
+    """HNSW baseline: greedy descent through upper levels, then the
+    batch-major BFiS at level 0 (per-query entry points ride in as
+    ``start``)."""
     base = index.base
 
     def one(q):

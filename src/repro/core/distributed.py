@@ -5,7 +5,9 @@ Two orthogonal distribution modes, composable on a ("data", "model") mesh:
 * **walker sharding** (the paper's intra-query parallelism, cross-device):
   the query batch is sharded over ``data``; each device along ``model`` is
   one Speed-ANN *walker* holding a private frontier and visited map over a
-  replicated graph.  A global round = scatter (replicated global queue,
+  replicated graph.  Walker expansions use the per-query ``core.bfis.expand``
+  (which lifts each call to a B=1 batch of the batch-major ``DistFn``);
+  corpus shards run the full batch-major engine on their local query slice.  A global round = scatter (replicated global queue,
   owner = axis_index) → collective-free local segment → CheckMetrics (one
   scalar ``psum`` per local round — the lazy-synchronization trigger) →
   merge (``all_gather`` of local frontiers + dedup + top-L; visited maps
@@ -66,7 +68,7 @@ def make_search_mesh(shape, names=("data", "model")) -> Mesh:
     devices = np.asarray(jax.devices()[:n]).reshape(shape)
     return Mesh(devices, names)
 
-from repro.config import SearchConfig
+from repro.core.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
 from repro.core.bfis import (DistFn, expand, point_dist, resolve_dist_fn,
@@ -300,7 +302,7 @@ def corpus_sharded_search(
 
     Returns (global ids (B,k), dists (B,k)).
     """
-    from repro.core.bfis import search_topm
+    from repro.core.bfis import search_topm_batch
 
     dist_fn = resolve_dist_fn(cfg, dist_fn)
     n_top = 0
@@ -313,8 +315,10 @@ def corpus_sharded_search(
         g = PaddedCSR(nbrs=nbrs, vectors=vectors, medoid=medoid, n_top=n_top,
                       flat=jnp.zeros((0, nbrs.shape[1], vectors.shape[1]),
                                      vectors.dtype))
-        ids, dists, _ = jax.vmap(
-            lambda qq: search_topm(g, qq, cfg, dist_fn=dist_fn))(q_local)
+        # batch-major engine inside the shard: the device's whole local
+        # query batch advances through one while_loop / one distance launch
+        # per step (bit-identical to the per-query vmap it replaces)
+        ids, dists, _ = search_topm_batch(g, q_local, cfg, dist_fn=dist_fn)
         gids = jnp.where(ids == fq.INVALID_ID, fq.INVALID_ID, ids + offset)
         # gather per-shard top-k across the shard axis and reduce
         all_ids = jax.lax.all_gather(gids, shard_axis)     # (S, b, k)

@@ -172,33 +172,41 @@ def group_by_indegree(
 # ---------------------------------------------------------------------------
 
 def gather_neighbor_ids(graph: PaddedCSR, active_ids: jax.Array) -> jax.Array:
-    """(M,) active vertex ids -> (M, R) neighbor ids (sentinel-padded)."""
+    """(..., M) active vertex ids -> (..., M, R) neighbor ids.
+
+    Leading-dims agnostic: the batch-major engine passes (B, M) ids and gets
+    all queries' neighbor rows in one gather; per-query callers pass (M,).
+    Invalid/sentinel actives yield fully padded rows.
+    """
     safe = jnp.minimum(active_ids, graph.n_nodes - 1)
     nbrs = graph.nbrs[safe]
-    return jnp.where((active_ids < graph.n_nodes)[:, None], nbrs, graph.n_nodes)
+    return jnp.where((active_ids < graph.n_nodes)[..., None], nbrs,
+                     graph.n_nodes)
 
 
 def fetch_neighbor_vectors(
     graph: PaddedCSR, active_ids: jax.Array, nbr_ids: jax.Array
 ) -> jax.Array:
-    """Fetch (M, R, d) neighbor embeddings via the two-level layout.
+    """Fetch (..., M, R, d) neighbor embeddings via the two-level layout.
 
+    Leading-dims agnostic like :func:`gather_neighbor_ids` — the batch-major
+    ``ref`` backend fetches a whole (B, M, R, d) expansion in one gather.
     Hot vertices (< n_top) read their flattened block (contiguous HBM burst);
     cold vertices gather rows from the embedding table.  Padding rows return
     +inf so downstream distances are +inf.
     """
     n = graph.n_nodes
     safe_nbr = jnp.minimum(nbr_ids, n - 1)
-    gathered = graph.vectors[safe_nbr]                        # (M, R, d)
+    gathered = graph.vectors[safe_nbr]                        # (..., M, R, d)
     gathered = jnp.where(
         (nbr_ids < n)[..., None], gathered,
         jnp.asarray(jnp.inf, gathered.dtype))
     if graph.n_top == 0:
         return gathered
-    hot = active_ids < graph.n_top                            # (M,)
+    hot = active_ids < graph.n_top                            # (..., M)
     safe_act = jnp.clip(active_ids, 0, graph.n_top - 1)
-    flat = graph.flat[safe_act]                               # (M, R, d)
-    return jnp.where(hot[:, None, None], flat, gathered)
+    flat = graph.flat[safe_act]                               # (..., M, R, d)
+    return jnp.where(hot[..., None, None], flat, gathered)
 
 
 def top_level_hit_fraction(graph: PaddedCSR, active_ids: jax.Array) -> jax.Array:

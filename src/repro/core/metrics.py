@@ -34,6 +34,14 @@ class SearchStats(NamedTuple):
         z = jnp.zeros((), jnp.int32)
         return SearchStats(z, z, z, z, z, z)
 
+    @staticmethod
+    def zero_batch(batch: int):
+        """Per-query counters stacked on a leading (B,) axis — the
+        batch-major engine's stats carry (lanes stay exact under the
+        active-query masking)."""
+        z = jnp.zeros((batch,), jnp.int32)
+        return SearchStats(z, z, z, z, z, z)
+
     def summary(self) -> dict:
         return {k: float(np.mean(np.asarray(v)))
                 for k, v in self._asdict().items()}

@@ -170,6 +170,52 @@ def scatter_round_robin(
     return jax.vmap(one)(jnp.arange(num_walkers))
 
 
+# ---------------------------------------------------------------------------
+# Batch-major operations — leading (B,) query axis on every leaf
+# ---------------------------------------------------------------------------
+#
+# The batch-major traversal engine (core.bfis / core.speedann) keeps ONE
+# frontier per query stacked on a leading batch axis and advances the whole
+# batch per global step.  These wrappers are ``jax.vmap`` of the single-query
+# ops above — bit-identical to the per-query path by construction (vmap of a
+# sort/gather is the batched sort/gather), while XLA fuses the batch into
+# single wide ops.
+
+def make_frontier_batch(capacity: int, batch: int) -> Frontier:
+    """A stacked (B, L) frontier; every row is ``make_frontier(capacity)``."""
+    return Frontier(
+        ids=jnp.full((batch, capacity), INVALID_ID, jnp.int32),
+        dists=jnp.full((batch, capacity), INF, jnp.float32),
+        checked=jnp.ones((batch, capacity), bool),
+    )
+
+
+def insert_batch(f: Frontier, new_ids: jax.Array, new_dists: jax.Array
+                 ) -> Tuple[Frontier, jax.Array, jax.Array]:
+    """:func:`insert` over a (B, L) frontier and (B, C) candidates."""
+    return jax.vmap(insert)(f, new_ids, new_dists)
+
+
+def select_unchecked_batch(
+    f: Frontier, m_max: int, m: jax.Array | int | None = None
+) -> Tuple[Frontier, jax.Array, jax.Array]:
+    """:func:`select_unchecked` over (B, L); ``m`` may be per-query (B,)."""
+    if m is None:
+        m = m_max
+    m = jnp.broadcast_to(jnp.asarray(m, jnp.int32), (f.ids.shape[0],))
+    return jax.vmap(lambda fr, mm: select_unchecked(fr, m_max, mm))(f, m)
+
+
+def has_unchecked_batch(f: Frontier) -> jax.Array:
+    """(B,) bool: per-query :func:`has_unchecked` on a stacked frontier."""
+    return jnp.any(~f.checked & (f.ids != INVALID_ID), axis=-1)
+
+
+def results_batch(f: Frontier, k: int) -> Tuple[jax.Array, jax.Array]:
+    """The first K (id, dist) pairs per query: (B, k) each."""
+    return f.ids[:, :k], f.dists[:, :k]
+
+
 def merge_frontiers(fs: Frontier) -> Tuple[Frontier, jax.Array]:
     """Merge stacked walker frontiers (W, L) into a global queue (Line 23).
 

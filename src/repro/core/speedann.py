@@ -16,39 +16,48 @@ Structure of one *global step* (outer loop iteration):
      checked); walker visited maps are OR-merged ("eventual consistency",
      §4.4); counters accumulate.
 
+**Batch-major engine.**  ``search_speedann_batch`` runs the whole (B, d)
+query batch through ONE outer ``lax.while_loop``: frontiers are (B, L),
+walker queues (B, W, L), visited maps (B, W, ...), stats (B,).  Each local
+round flattens the (B, W) walker lanes into the batch axis of the distance
+backend, so ALL queries' walker expansions are ONE kernel launch.  Converged
+queries are masked no-ops (per-lane carry select — exactly ``jax.vmap``'s
+while_loop rule), so the batch-major path is bit-identical to vmapping the
+per-query search and per-query counters stay exact.  ``search_speedann``
+remains as a thin B=1 wrapper.
+
 Walkers here are *vmapped lanes on one device*; ``core.distributed`` lifts
 the same step functions onto a ``shard_map`` walker mesh axis where the merge
 becomes an ``all_gather`` and CheckMetrics a scalar ``psum``.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import SearchConfig
+from repro.core.config import SearchConfig
 from repro.core import queue as fq
 from repro.core import visited as vs
-from repro.core.bfis import (DistFn, expand, point_dist, resolve_dist_fn,
-                             staged_m)
+from repro.core.bfis import (DistFn, _seed_ids, expand_batch, lane_select,
+                             point_dist, resolve_dist_fn, staged_m)
 from repro.core.metrics import SearchStats
 
 
 class _LocalState(NamedTuple):
-    locals_: fq.Frontier      # (W, L) private walker queues
-    visited: vs.Visited       # (W, ...) private visited maps
-    up_pos: jax.Array         # (W,) latest update positions
-    lstep: jax.Array          # () local rounds taken this segment
-    do_merge: jax.Array       # () bool — CheckMetrics flag
-    comps: jax.Array          # () distance computations this segment
+    locals_: fq.Frontier      # (B, W, L) private walker queues
+    visited: vs.Visited       # (B, W, ...) private visited maps
+    up_pos: jax.Array         # (B, W) latest update positions
+    lstep: jax.Array          # (B,) local rounds taken this segment
+    do_merge: jax.Array       # (B,) bool — CheckMetrics flag
+    comps: jax.Array          # (B,) distance computations this segment
 
 
 class _GlobalState(NamedTuple):
-    frontier: fq.Frontier     # (L,) global queue S
-    visited: vs.Visited       # (W, ...) walker visited maps (persist)
-    stats: SearchStats
+    frontier: fq.Frontier     # (B, L) global queue S
+    visited: vs.Visited       # (B, W, ...) walker visited maps (persist)
+    stats: SearchStats        # leaves (B,)
 
 
 def check_metrics(up_pos: jax.Array, active: jax.Array, cfg: SearchConfig
@@ -61,44 +70,153 @@ def check_metrics(up_pos: jax.Array, active: jax.Array, cfg: SearchConfig
     return u_bar >= cfg.queue_len * cfg.sync_ratio
 
 
-def _local_segment(
-    graph, q, locals_: fq.Frontier, visited: vs.Visited,
+def _local_segment_batch(
+    graph, queries: jax.Array, locals_: fq.Frontier, visited: vs.Visited,
     active: jax.Array, cfg: SearchConfig, dist_fn: DistFn,
 ) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
-    """Lines 11–22: collective-free private best-first searches.
+    """Lines 11–22 batch-major: collective-free private best-first searches
+    for every query's walker pool at once.
 
-    Runs until CheckMetrics fires, every walker exhausts its queue, or the
-    ``local_steps`` budget is hit.  Returns (locals', visited', rounds,
-    comps)."""
+    Each local round flattens the (B, W) walker lanes into one (B·W,)
+    batch-major expansion — ONE distance launch for the whole batch's
+    walkers.  Per query, the segment runs until CheckMetrics fires, every
+    walker exhausts its queue, or the ``local_steps`` budget is hit;
+    finished queries are masked no-ops.  Returns (locals', visited',
+    rounds (B,), comps (B,))."""
     w = cfg.num_walkers
     cap = cfg.queue_len
+    bsz = queries.shape[0]
+    q_rep = jnp.repeat(queries, w, axis=0)                 # (B·W, d)
 
-    def cond(s: _LocalState):
-        is_active = jnp.arange(w) < active
+    def flatten_bw(t):
+        return t.reshape((bsz * w,) + t.shape[2:])
+
+    def unflatten_bw(t):
+        return t.reshape((bsz, w) + t.shape[1:])
+
+    def is_active_mask():
+        return jnp.arange(w)[None, :] < active[:, None]    # (B, W)
+
+    def lanes_live(s: _LocalState) -> jax.Array:
         any_work = jnp.any(
-            jax.vmap(fq.has_unchecked)(s.locals_) & is_active)
+            fq.has_unchecked_batch(s.locals_) & is_active_mask(), axis=-1)
         return (~s.do_merge) & any_work & (s.lstep < cfg.local_steps)
 
+    def cond(s: _LocalState):
+        return jnp.any(lanes_live(s))
+
     def body(s: _LocalState):
-        def one(fr, vis):
-            return expand(graph, q, fr, vis, 1, 1, dist_fn)
-        locals2, visited2, up, n = jax.vmap(one)(s.locals_, s.visited)
-        is_active = (jnp.arange(w) < active)
-        had_work = jax.vmap(fq.has_unchecked)(s.locals_) & is_active
+        alive = lanes_live(s)
+        had_work = fq.has_unchecked_batch(s.locals_) & is_active_mask()
+        # ONE batch-major expansion over all B·W walker lanes (M=1 each)
+        fr = jax.tree.map(flatten_bw, s.locals_)
+        vis = jax.tree.map(flatten_bw, s.visited)
+        fr, vis, up, n = expand_batch(graph, q_rep, fr, vis, 1, 1, dist_fn)
+        locals2 = jax.tree.map(unflatten_bw, fr)
+        visited2 = jax.tree.map(unflatten_bw, vis)
+        up = up.reshape(bsz, w)
+        n = n.reshape(bsz, w)
         # walkers with no unchecked candidates saturate at L (stuck)
         up = jnp.where(had_work, up, cap).astype(jnp.int32)
-        do_merge = check_metrics(up, active, cfg)
-        return _LocalState(
+        do_merge = jax.vmap(
+            lambda u, a: check_metrics(u, a, cfg))(up, active)
+        new = _LocalState(
             locals_=locals2, visited=visited2, up_pos=up,
             lstep=s.lstep + 1, do_merge=do_merge,
-            comps=s.comps + jnp.sum(jnp.where(had_work, n, 0)))
+            comps=s.comps + jnp.sum(jnp.where(had_work, n, 0), axis=-1))
+        return lane_select(alive, new, s)
 
     init = _LocalState(
         locals_=locals_, visited=visited,
-        up_pos=jnp.zeros((w,), jnp.int32), lstep=jnp.int32(0),
-        do_merge=jnp.bool_(False), comps=jnp.int32(0))
+        up_pos=jnp.zeros((bsz, w), jnp.int32),
+        lstep=jnp.zeros((bsz,), jnp.int32),
+        do_merge=jnp.zeros((bsz,), bool),
+        comps=jnp.zeros((bsz,), jnp.int32))
     out = jax.lax.while_loop(cond, body, init)
     return out.locals_, out.visited, out.lstep, out.comps
+
+
+def search_speedann_batch(
+    graph,
+    queries: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: Optional[DistFn] = None,
+) -> Tuple[jax.Array, jax.Array, SearchStats]:
+    """Batch-major Speed-ANN (Algorithm 3) over a (B, d) query batch.
+
+    Returns (ids (B, k), dists (B, k), stats (B,)); bit-identical to
+    vmapping :func:`search_speedann` over the batch.
+    """
+    dist_fn = resolve_dist_fn(cfg, dist_fn)
+    w, cap = cfg.num_walkers, cfg.queue_len
+    bsz = queries.shape[0]
+
+    frontier = fq.make_frontier_batch(cap, bsz)
+    visited0 = vs.make_visited_batch(cfg.visited_mode, graph.n_nodes, bsz,
+                                     cfg.hash_bits)
+    s0 = _seed_ids(graph, start, bsz)
+    visited0, _ = vs.check_and_insert_batch(
+        visited0, s0[:, None], jnp.ones((bsz, 1), bool))
+    v0 = graph.vectors[s0].astype(jnp.float32)
+    d0 = point_dist(v0, queries, cfg.metric)[:, None]
+    frontier, _, _ = fq.insert_batch(frontier, s0[:, None], d0)
+    # Expand the starting point once before dividing work, so the first
+    # scatter has a full frontier to distribute (paper Fig. 4: the search
+    # fans out from P's neighbors; without this, NoSync would degenerate to
+    # a single busy walker).
+    frontier, visited0, _, n0 = expand_batch(
+        graph, queries, frontier, visited0, 1, 1, dist_fn)
+    # replicate the seed visited map to all walkers (consistent at t=0)
+    visited = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[:, None], (bsz, w) + t.shape[1:]),
+        visited0)
+
+    init = _GlobalState(
+        frontier=frontier, visited=visited,
+        stats=SearchStats.zero_batch(bsz)._replace(
+            dist_comps=jnp.int32(1) + n0))
+
+    def lanes_live(s: _GlobalState) -> jax.Array:
+        return fq.has_unchecked_batch(s.frontier) \
+            & (s.stats.steps < cfg.max_steps)
+
+    def cond(s: _GlobalState):
+        return jnp.any(lanes_live(s))
+
+    def body(s: _GlobalState):
+        # invariant: s.visited is OR-merged (all walkers agree) on entry
+        alive = lanes_live(s)
+        live = fq.has_unchecked_batch(s.frontier).astype(jnp.int32)
+        m = jnp.minimum(staged_m(s.stats.steps, cfg).astype(jnp.int32), w)
+        union_before = jax.vmap(vs.popcount)(s.visited)
+        # Line 7: divide unchecked candidates among active walkers.
+        locals_ = jax.vmap(
+            lambda f, a: fq.scatter_round_robin(f, w, a))(s.frontier, m)
+        # Lines 11–22: collective-free local searches + CheckMetrics.
+        locals_, visited, rounds, comps = _local_segment_batch(
+            graph, queries, locals_, s.visited, m, cfg, dist_fn)
+        # Line 23: merge local queues into the global queue; §4.4: visited
+        # maps reach eventual consistency here.
+        merged, _ = jax.vmap(fq.merge_frontiers)(locals_)
+        visited = jax.vmap(vs.merge_visited)(visited)
+        # cross-walker duplicate computations = work minus union growth
+        n_dups = comps - (jax.vmap(vs.popcount)(visited) - union_before)
+        stats = s.stats._replace(
+            steps=s.stats.steps + live,
+            local_steps=s.stats.local_steps + rounds * m,
+            dist_comps=s.stats.dist_comps + comps,
+            dup_comps=s.stats.dup_comps + jnp.maximum(n_dups, 0),
+            syncs=s.stats.syncs + live,
+            crit_rounds=s.stats.crit_rounds + rounds,
+        )
+        return lane_select(
+            alive, _GlobalState(frontier=merged, visited=visited,
+                                stats=stats), s)
+
+    out = jax.lax.while_loop(cond, body, init)
+    ids, dists = fq.results_batch(out.frontier, cfg.k)
+    return ids, dists, out.stats
 
 
 def search_speedann(
@@ -108,79 +226,13 @@ def search_speedann(
     start: Optional[jax.Array] = None,
     dist_fn: Optional[DistFn] = None,
 ) -> Tuple[jax.Array, jax.Array, SearchStats]:
-    """Full Speed-ANN search for one query (Algorithm 3)."""
-    dist_fn = resolve_dist_fn(cfg, dist_fn)
-    w, cap = cfg.num_walkers, cfg.queue_len
-
-    frontier = fq.make_frontier(cap)
-    visited0 = vs.make_visited(cfg.visited_mode, graph.n_nodes, cfg.hash_bits)
-    s0 = graph.medoid if start is None else start.astype(jnp.int32)
-    visited0, _ = vs.check_and_insert(visited0, s0[None], jnp.ones((1,), bool))
-    v0 = graph.vectors[s0].astype(jnp.float32)
-    d0 = point_dist(v0, q, cfg.metric)[None]
-    frontier, _, _ = fq.insert(frontier, s0[None], d0)
-    # Expand the starting point once before dividing work, so the first
-    # scatter has a full frontier to distribute (paper Fig. 4: the search
-    # fans out from P's neighbors; without this, NoSync would degenerate to
-    # a single busy walker).
-    frontier, visited0, _, n0 = expand(
-        graph, q, frontier, visited0, 1, 1, dist_fn)
-    # replicate the seed visited map to all walkers (consistent at t=0)
-    visited = jax.tree.map(
-        lambda t: jnp.broadcast_to(t[None], (w,) + t.shape), visited0)
-
-    init = _GlobalState(
-        frontier=frontier, visited=visited,
-        stats=SearchStats.zero()._replace(dist_comps=jnp.int32(1) + n0))
-
-    def cond(s: _GlobalState):
-        return fq.has_unchecked(s.frontier) & (s.stats.steps < cfg.max_steps)
-
-    def body(s: _GlobalState):
-        # invariant: s.visited is OR-merged (all walkers agree) on entry
-        live = fq.has_unchecked(s.frontier)
-        m = staged_m(s.stats.steps, cfg).astype(jnp.int32)
-        m = jnp.minimum(m, w)
-        union_before = vs.popcount(s.visited)
-        # Line 7: divide unchecked candidates among active walkers.
-        locals_ = fq.scatter_round_robin(s.frontier, w, active=m)
-        # Lines 11–22: collective-free local searches + CheckMetrics.
-        locals_, visited, rounds, comps = _local_segment(
-            graph, q, locals_, s.visited, m, cfg, dist_fn)
-        # Line 23: merge local queues into the global queue; §4.4: visited
-        # maps reach eventual consistency here.
-        merged, _ = fq.merge_frontiers(locals_)
-        visited = vs.merge_visited(visited)
-        # cross-walker duplicate computations = work minus union growth
-        n_dups = comps - (vs.popcount(visited) - union_before)
-        stats = s.stats._replace(
-            steps=s.stats.steps + live.astype(jnp.int32),
-            local_steps=s.stats.local_steps + rounds * m,
-            dist_comps=s.stats.dist_comps + comps,
-            dup_comps=s.stats.dup_comps + jnp.maximum(n_dups, 0),
-            syncs=s.stats.syncs + live.astype(jnp.int32),
-            crit_rounds=s.stats.crit_rounds + rounds,
-        )
-        return _GlobalState(frontier=merged, visited=visited, stats=stats)
-
-    out = jax.lax.while_loop(cond, body, init)
-    ids, dists = fq.results(out.frontier, cfg.k)
-    return ids, dists, out.stats
-
-
-def search_speedann_batch(
-    graph,
-    queries: jax.Array,
-    cfg: SearchConfig,
-    start: Optional[jax.Array] = None,
-    dist_fn: Optional[DistFn] = None,
-):
-    """vmapped Speed-ANN over a (B, d) query batch."""
-    fn = functools.partial(search_speedann, graph, cfg=cfg,
-                           dist_fn=resolve_dist_fn(cfg, dist_fn))
-    if start is None:
-        return jax.vmap(lambda qq: fn(qq))(queries)
-    return jax.vmap(lambda qq, ss: fn(qq, start=ss))(queries, start)
+    """Full Speed-ANN search for one query — a thin B=1 wrapper over the
+    batch-major engine."""
+    start_b = None if start is None \
+        else jnp.asarray(start, jnp.int32).reshape(1)
+    ids, dists, stats = search_speedann_batch(
+        graph, q[None, :], cfg, start=start_b, dist_fn=dist_fn)
+    return ids[0], dists[0], jax.tree.map(lambda t: t[0], stats)
 
 
 # Named ablation variants (§5.3) ------------------------------------------

@@ -119,6 +119,37 @@ def _first_occurrence(ids: jax.Array, valid: jax.Array) -> jax.Array:
     return valid & ~dup_of_earlier
 
 
+# ---------------------------------------------------------------------------
+# Batch-major operations — leading (B,) query axis on the table
+# ---------------------------------------------------------------------------
+
+def make_visited_batch(mode: str, n_nodes: int, batch: int,
+                       hash_bits: int = 14) -> Visited:
+    """A stacked visited map: one :func:`make_visited` table per query on a
+    leading (B,) axis (the batch-major engine's per-query visited state).
+
+    Walker-stacked maps compose by passing ``batch=(B, W)``-style products
+    through repeated broadcasting at the call site; this helper only adds
+    the query axis."""
+    if mode == "bitmap":
+        return Visited(jnp.zeros((batch, n_nodes), bool), True, 0)
+    if mode == "hash":
+        size = 1 << hash_bits
+        return Visited(jnp.full((batch, size), _EMPTY, jnp.int32), False,
+                       size - 1)
+    if mode == "loose":
+        return Visited(jnp.full((batch, 1), _EMPTY, jnp.int32), False, 0)
+    raise ValueError(f"unknown visited mode {mode!r}")
+
+
+def check_and_insert_batch(
+    v: Visited, ids: jax.Array, valid: jax.Array
+) -> Tuple[Visited, jax.Array]:
+    """:func:`check_and_insert` vmapped over the leading query axis:
+    (B, ...) tables × (B, C) ids — bit-identical to the per-query path."""
+    return jax.vmap(check_and_insert)(v, ids, valid)
+
+
 def popcount(v: Visited) -> jax.Array:
     """Number of marked vertices in walker 0's table.
 

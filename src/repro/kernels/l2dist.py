@@ -1,10 +1,14 @@
 """Fused gather + squared-L2 distance Pallas TPU kernel.
 
 This is the paper's compute hot spot (Challenges II & IV): the neighbor
-expansion gathers ≤ M·R feature vectors at data-dependent addresses and
-reduces each against the query.  On CPU the paper attacks it with neighbor
+expansion gathers ≤ B·M·R feature vectors at data-dependent addresses and
+reduces each against its query.  On CPU the paper attacks it with neighbor
 grouping + prefetch; the TPU-native form is a *fused dynamic-gather +
-distance* kernel so gathered rows never round-trip through HBM:
+distance* kernel so gathered rows never round-trip through HBM.  The
+batch-major traversal engine launches each kernel ONCE per global step over
+the whole (B, C) candidate grid — the query batch rides in the grid's
+leading dimension, so B amortizes grid setup and keeps the row-stream
+pipeline full:
 
 * ``rowgather`` variant — scalar-prefetched candidate ids drive the
   ``BlockSpec`` index_map of the embedding table, so the pipeline streams

@@ -28,6 +28,10 @@ def l2dist(
 ) -> jax.Array:
     """Fused gather + distance: (N,d), (B,C), (B,d) -> (B,C) f32.
 
+    This is the batch-major hot-path launch: the traversal engine calls it
+    ONCE per global step with the whole query batch's flattened candidate
+    grid (B queries × C = M·R candidates each).
+
     ``metric`` selects the reduction: "l2" (squared L2) or "ip"/"cosine"
     (negative inner product; cosine callers pre-normalize, so the kernels
     treat it as ip).  Smaller = closer for every metric.

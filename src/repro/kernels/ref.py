@@ -11,7 +11,9 @@ import jax.numpy as jnp
 
 def dist_ref(table: jax.Array, ids: jax.Array, queries: jax.Array,
              metric: str = "l2") -> jax.Array:
-    """Gather + distance oracle (metric-general).
+    """Gather + distance oracle (metric-general, batch-major: the (B, C)
+    grid here is exactly the per-step workload the traversal engine hands
+    the Pallas kernels).
 
     table:   (N, d) feature vectors
     ids:     (B, C) int32 candidate ids; ids >= N are padding -> +inf

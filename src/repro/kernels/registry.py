@@ -4,15 +4,19 @@ The neighbor expansion (Challenges II & IV) is the paper's compute hot spot;
 this module is the seam between the search algorithms (``core.bfis``,
 ``core.speedann``, ``core.distributed``) and the distance implementations
 (``kernels.l2dist``).  Search code never names a kernel: it carries a
-``SearchConfig.dist_backend`` string that is resolved here to a
-``DistFn(graph, active_ids (M,), nbr_ids (M,R), q (d,)) -> (M,R)``.
+``SearchConfig.dist_backend`` string that is resolved here to a BATCH-MAJOR
+``DistFn(graph, active_ids (B,M), nbr_ids (B,M,R), queries (B,d)) ->
+(B,M,R)`` — one launch covers the whole query batch's expansion for a
+global step, so the kernels see the full (B·M·R, d) × (B, d) workload they
+can amortize instead of B per-lane gathers.
 
 Built-in backends:
 
 * ``ref``       — pure-jnp two-level gather (``core.bfis.dist_l2``); exploits
   the flattened neighbor layout for hot vertices.
 * ``rowgather`` — scalar-prefetch Pallas kernel: candidate ids drive the
-  BlockSpec index_map so the pipeline streams exactly the needed rows.
+  BlockSpec index_map so the pipeline streams exactly the needed rows; the
+  batch rides in the kernel grid's leading dimension.
 * ``dma``       — explicit-DMA tile gather + MXU reduction; candidate counts
   are padded to the ``cfg.dma_group`` tile (padding ids map to +inf and are
   sliced off, so ragged M·R shapes are transparent to callers).
@@ -66,22 +70,24 @@ def resolve_backend(cfg) -> Callable:
 
 
 def pad_ids_to_tile(ids: jax.Array, tile: int, n_nodes: int) -> jax.Array:
-    """Pad a flat (C,) id vector to a multiple of ``tile`` with the sentinel
-    ``n_nodes`` (>= N ids produce +inf distances in every kernel)."""
-    c = ids.shape[0]
+    """Pad a (..., C) id array along its LAST axis to a multiple of ``tile``
+    with the sentinel ``n_nodes`` (>= N ids produce +inf distances in every
+    kernel)."""
+    c = ids.shape[-1]
     pad = (-c) % tile
     if pad == 0:
         return ids
     return jnp.concatenate(
-        [ids, jnp.full((pad,), n_nodes, ids.dtype)])
+        [ids, jnp.full(ids.shape[:-1] + (pad,), n_nodes, ids.dtype)],
+        axis=-1)
 
 
 def make_dist_fn(impl: str = "rowgather", *, metric: str = "l2",
                  dma_group: int = 8,
                  interpret: bool | None = None) -> Callable:
-    """Adapter producing a ``core.bfis.DistFn`` that routes the expansion's
-    per-query (M, R) distance computations through the batched (B, C)
-    kernels (B=1, C=M·R; C padded to the DMA tile for ``impl="dma"``).
+    """Adapter producing a batch-major ``core.bfis.DistFn`` that routes the
+    whole batch's (B, M, R) expansion through ONE (B, C) kernel launch
+    (C = M·R, padded to the DMA tile for ``impl="dma"``).
 
     ``metric`` is the index metric tag ("l2" | "ip" | "cosine"); every
     backend serves every metric (cosine = ip on pre-normalized vectors).
@@ -94,15 +100,15 @@ def make_dist_fn(impl: str = "rowgather", *, metric: str = "l2",
         from repro.core.bfis import make_ref_dist_fn
         return make_ref_dist_fn(metric)
 
-    def dist_fn(graph, active_ids, nbr_ids, q):
-        m, r = nbr_ids.shape
-        flat = nbr_ids.reshape(m * r)
+    def dist_fn(graph, active_ids, nbr_ids, queries):
+        b, m, r = nbr_ids.shape
+        flat = nbr_ids.reshape(b, m * r)
         if impl == "dma":
             flat = pad_ids_to_tile(flat, dma_group, graph.n_nodes)
-        d = ops.l2dist(graph.vectors, flat[None, :], q[None, :],
+        d = ops.l2dist(graph.vectors, flat, queries,
                        impl=impl, interpret=interpret, g=dma_group,
                        metric=metric)
-        return d[0, :m * r].reshape(m, r)
+        return d[:, :m * r].reshape(b, m, r)
     return dist_fn
 
 

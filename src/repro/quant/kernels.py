@@ -1,6 +1,8 @@
 """Quantized distance backends for the neighbor-expansion hot path.
 
-These are drop-in ``DistFn`` implementations (see ``core.bfis.DistFn``)
+These are drop-in BATCH-MAJOR ``DistFn`` implementations (see
+``core.bfis.DistFn``: (B, M, R) ids in, (B, M, R) f32 distances out, one
+launch per global step for the whole query batch)
 that read the index's QUANTIZED table (``PaddedCSR.codes`` + ``.scales``)
 instead of the float32 ``vectors`` — the gather-side payload shrinks 4x
 (int8) or 2x (bf16), which is exactly what the paper's memory-hierarchy
@@ -69,62 +71,66 @@ def _kmetric(metric: str) -> str:
 # ---------------------------------------------------------------------------
 
 def make_int8_dist_fn(metric: str = "l2"):
-    """Int8 DistFn: int32-accumulated integer dot (per-vector scales) or
-    dequantize-and-reduce (per-dimension scales)."""
+    """Batch-major int8 DistFn: int32-accumulated integer dot (per-vector
+    scales) or dequantize-and-reduce (per-dimension scales).  One call
+    gathers every query's (B, M·R) code rows at once."""
     kmetric = _kmetric(metric)
 
-    def dist_fn(graph, active_ids, nbr_ids, q):
+    def dist_fn(graph, active_ids, nbr_ids, queries):
         codes, scales = require_codes(graph, "int8")
-        m, r = nbr_ids.shape
-        flat = nbr_ids.reshape(-1)
+        b, m, r = nbr_ids.shape
+        flat = nbr_ids.reshape(b, m * r)
         n = graph.n_nodes
         safe = jnp.minimum(flat, n - 1)
-        rows = codes[safe]                                 # (C, d) int8
-        qf = q.astype(jnp.float32)
+        rows = codes[safe]                                 # (B, C, d) int8
+        qf = queries.astype(jnp.float32)                   # (B, d)
         per_dim = scales.shape[0] == 1                     # static at trace
         if per_dim:
-            x = rows.astype(jnp.float32) * scales          # (C, d) f32
+            x = rows.astype(jnp.float32) * scales          # (B, C, d) f32
             if kmetric == "ip":
-                d = -(x @ qf)
+                d = -jnp.sum(x * qf[:, None, :], axis=-1)
             else:
-                d = jnp.sum((x - qf[None, :]) ** 2, axis=-1)
+                d = jnp.sum((x - qf[:, None, :]) ** 2, axis=-1)
         else:
             # query codes live on a wider grid (codec.query_levels) sized so
             # the int8 x query dot cannot overflow the int32 accumulator;
-            # the asymmetric error stays dominated by the stored codes
-            qc, qs = quantize_query(qf)                    # (d,) i32, (1,)
-            acc = rows.astype(jnp.int32) @ qc              # (C,) i32
-            s = scales[safe, 0]                            # (C,) f32
-            xq = s * qs[0] * acc.astype(jnp.float32)
+            # the asymmetric error stays dominated by the stored codes.
+            # Integer arithmetic is exact, so the batched einsum is
+            # bit-identical to the per-query matvec it replaces.
+            qc, qs = quantize_query(qf)                    # (B,d) i32, (B,1)
+            acc = jnp.einsum("bcd,bd->bc", rows.astype(jnp.int32), qc)
+            s = scales[safe, 0]                            # (B, C) f32
+            xq = s * qs * acc.astype(jnp.float32)
             if kmetric == "ip":
                 d = -xq
             else:
                 rn2 = jnp.sum(rows.astype(jnp.int32) ** 2, axis=-1)
-                q2 = jnp.sum(qf * qf)
+                q2 = jnp.sum(qf * qf, axis=-1, keepdims=True)
                 d = jnp.maximum(
                     s * s * rn2.astype(jnp.float32) - 2.0 * xq + q2, 0.0)
         d = jnp.where(flat < n, d, jnp.inf)
-        return d.reshape(m, r)
+        return d.reshape(b, m, r)
     return dist_fn
 
 
 def make_bf16_dist_fn(metric: str = "l2"):
-    """bf16 DistFn: half-width gather, f32 reduction, no scales."""
+    """Batch-major bf16 DistFn: half-width gather, f32 reduction, no
+    scales."""
     kmetric = _kmetric(metric)
 
-    def dist_fn(graph, active_ids, nbr_ids, q):
+    def dist_fn(graph, active_ids, nbr_ids, queries):
         codes, _ = require_codes(graph, "bf16")
-        m, r = nbr_ids.shape
-        flat = nbr_ids.reshape(-1)
+        b, m, r = nbr_ids.shape
+        flat = nbr_ids.reshape(b, m * r)
         n = graph.n_nodes
         rows = codes[jnp.minimum(flat, n - 1)].astype(jnp.float32)
-        qf = q.astype(jnp.float32)
+        qf = queries.astype(jnp.float32)                   # (B, d)
         if kmetric == "ip":
-            d = -(rows @ qf)
+            d = -jnp.sum(rows * qf[:, None, :], axis=-1)
         else:
-            d = jnp.sum((rows - qf[None, :]) ** 2, axis=-1)
+            d = jnp.sum((rows - qf[:, None, :]) ** 2, axis=-1)
         d = jnp.where(flat < n, d, jnp.inf)
-        return d.reshape(m, r)
+        return d.reshape(b, m, r)
     return dist_fn
 
 
@@ -205,18 +211,19 @@ def int8dist_rowgather(
 
 
 def make_rowgather_int8_dist_fn(metric: str = "l2"):
-    """Pallas int8 DistFn (B=1 adapter, mirroring ``registry.make_dist_fn``)."""
-    def dist_fn(graph, active_ids, nbr_ids, q):
+    """Batch-major Pallas int8 DistFn (mirroring ``registry.make_dist_fn``):
+    the whole (B, M·R) candidate grid is ONE scalar-prefetch launch."""
+    def dist_fn(graph, active_ids, nbr_ids, queries):
         codes, scales = require_codes(graph, "int8")
         if scales.shape[0] == 1:
             raise NotImplementedError(
                 "rowgather_int8 implements the per-vector-scale integer "
                 "path; per-dimension scales are served by 'ref_int8'")
-        m, r = nbr_ids.shape
+        b, m, r = nbr_ids.shape
         d = int8dist_rowgather(codes, scales,
-                               nbr_ids.reshape(1, m * r), q[None, :],
+                               nbr_ids.reshape(b, m * r), queries,
                                metric=metric)
-        return d[0].reshape(m, r)
+        return d.reshape(b, m, r)
     return dist_fn
 
 

@@ -11,7 +11,12 @@ the top bucket are served in top-bucket chunks.
 The searcher itself is the full Speed-ANN stack (staged parallel expansion,
 adaptive synchronization, bounded step budgets) with the distance backend
 resolved once from ``SearchConfig.dist_backend`` — kernel selection is a
-config knob, not a code path.
+config knob, not a code path.  Each bucket's compiled executable is ONE
+batch-major traversal program (``core.bfis``/``core.speedann``): the whole
+padded batch advances through a single while_loop with one distance-kernel
+launch per global step, instead of B vmapped per-query lanes — so the
+bucket ladder directly trades padding waste against per-step launch
+amortization.
 
 The engine is a stage of the ``repro.ann`` facade lifecycle: pass an
 :class:`repro.ann.AnnIndex` + :class:`repro.ann.SearchParams` (or call
@@ -58,7 +63,7 @@ import numpy as np
 
 from repro.ann.index import (AnnIndex, normalize_queries, remap_result_ids)
 from repro.ann.spec import SearchParams
-from repro.config import SearchConfig
+from repro.core.config import SearchConfig
 from repro.core.bfis import (DistFn, bfis_search_batch, hnsw_search_batch,
                              resolve_dist_fn, search_topm_batch)
 from repro.core.distributed import ShardedIndex, corpus_engine_searcher

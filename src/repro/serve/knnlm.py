@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ann import AnnIndex, IndexSpec, SearchParams
-from repro.config import SearchConfig
+from repro.core.config import SearchConfig
 
 
 class KNNLMDatastore(NamedTuple):

@@ -1,0 +1,201 @@
+"""Batch-major traversal engine: parity with the per-query path.
+
+The batch-major engine (one ``lax.while_loop`` over batch-leading state,
+one distance launch per global step) replaced per-query searches under
+``jax.vmap``.  Its contract is BIT-IDENTITY: for every algorithm × backend
+× metric × quantization, ``search_*_batch(graph, Q)`` must equal
+``jax.vmap(search_*)(Q)`` exactly — ids, dists, AND every SearchStats
+counter (converged lanes are masked no-ops, so per-query counters cannot
+drift).  Batch composition must also be invisible: a query's result cannot
+depend on which other queries share its batch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ann import AnnIndex, IndexSpec, SearchParams
+from repro.core import build_nsg, recall_at_k
+from repro.core.bfis import search_topm, search_topm_batch
+from repro.core.config import SearchConfig
+from repro.core.speedann import search_speedann, search_speedann_batch
+from repro.data import make_vector_dataset
+from repro.quant.codec import fit_scales, quantize
+from repro.quant.scheme import QuantSpec
+
+K = 10
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("deep", n=900, n_queries=8, k=K, dim=16,
+                               n_clusters=8, seed=11)
+
+
+@pytest.fixture(scope="module")
+def graph(ds):
+    return build_nsg(ds.base, degree=12, knn_k=12, ef_construction=24,
+                     passes=1)
+
+
+def quantized(graph, dtype):
+    spec = QuantSpec(dtype=dtype)
+    scales = fit_scales(graph.vectors, spec)
+    return graph._replace(
+        codes=quantize(graph.vectors, spec, scales),
+        scales=jnp.asarray(scales, jnp.float32))
+
+
+BASE = SearchConfig(k=K, queue_len=32, m_max=3, staged=False, max_steps=96)
+SPEED = BASE.with_(m_max=4, num_walkers=4, staged=True, local_steps=4)
+
+
+def assert_batch_matches_vmap(batch_fn, single_fn, graph, queries, cfg):
+    """The acceptance bar: batched == vmapped per-query, bit for bit."""
+    ids_b, d_b, st_b = batch_fn(graph, queries, cfg)
+    ids_v, d_v, st_v = jax.vmap(
+        lambda q: single_fn(graph, q, cfg))(queries)
+    np.testing.assert_array_equal(np.asarray(ids_b), np.asarray(ids_v))
+    np.testing.assert_array_equal(np.asarray(d_b), np.asarray(d_v))
+    for field in st_b._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_b, field)),
+            np.asarray(getattr(st_v, field)),
+            err_msg=f"stats field {field!r} drifted")
+    return ids_b
+
+
+@pytest.mark.parametrize("backend", ["ref", "rowgather", "dma"])
+def test_topm_batch_bit_identical_fp32_backends(ds, graph, backend):
+    q = jnp.asarray(ds.queries)
+    ids = assert_batch_matches_vmap(
+        search_topm_batch, search_topm, graph, q,
+        BASE.with_(dist_backend=backend))
+    assert recall_at_k(np.asarray(ids), ds.gt_ids, K) >= 0.9
+
+
+@pytest.mark.parametrize("backend", ["ref", "dma"])
+def test_speedann_batch_bit_identical(ds, graph, backend):
+    q = jnp.asarray(ds.queries)
+    ids = assert_batch_matches_vmap(
+        search_speedann_batch, search_speedann, graph, q,
+        SPEED.with_(dist_backend=backend))
+    assert recall_at_k(np.asarray(ids), ds.gt_ids, K) >= 0.9
+
+
+@pytest.mark.parametrize("backend,dtype", [
+    ("ref_int8", "int8"), ("rowgather_int8", "int8"), ("ref_bf16", "bf16")])
+def test_batch_bit_identical_quant_backends(ds, graph, backend, dtype):
+    gq = quantized(graph, dtype)
+    q = jnp.asarray(ds.queries)
+    assert_batch_matches_vmap(
+        search_topm_batch, search_topm, gq, q,
+        BASE.with_(dist_backend=backend))
+
+
+@pytest.mark.parametrize("metric", ["ip", "cosine"])
+def test_batch_bit_identical_across_metrics(ds, metric):
+    base = np.asarray(ds.base, np.float32)
+    if metric == "cosine":
+        base = base / np.maximum(
+            np.linalg.norm(base, axis=1, keepdims=True), 1e-12)
+    g = build_nsg(base, degree=12, knn_k=12, ef_construction=24, passes=1,
+                  metric="l2" if metric == "cosine" else metric)
+    q = jnp.asarray(ds.queries)
+    if metric == "cosine":
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=1, keepdims=True), 1e-12)
+    assert_batch_matches_vmap(search_topm_batch, search_topm, g, q,
+                              BASE.with_(metric=metric))
+    assert_batch_matches_vmap(search_speedann_batch, search_speedann, g, q,
+                              SPEED.with_(metric=metric))
+
+
+def test_batch_composition_is_invisible(ds, graph):
+    """A query's result must not depend on its batch mates: lanes that
+    converge early are exact no-ops while stragglers keep looping."""
+    q = jnp.asarray(ds.queries)
+    ids_all, d_all, st_all = search_topm_batch(graph, q, BASE)
+    # front slice of the batch vs the same queries in a smaller batch
+    ids_sub, d_sub, st_sub = search_topm_batch(graph, q[:3], BASE)
+    np.testing.assert_array_equal(np.asarray(ids_all)[:3],
+                                  np.asarray(ids_sub))
+    np.testing.assert_array_equal(np.asarray(d_all)[:3], np.asarray(d_sub))
+    for field in st_all._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(st_all, field))[:3],
+            np.asarray(getattr(st_sub, field)))
+    # B=1 wrapper == the corresponding batch row
+    ids_1, d_1, st_1 = search_topm(graph, q[5], BASE)
+    np.testing.assert_array_equal(np.asarray(ids_all)[5], np.asarray(ids_1))
+    np.testing.assert_array_equal(np.asarray(d_all)[5], np.asarray(d_1))
+    assert int(st_1.steps) == int(np.asarray(st_all.steps)[5])
+
+
+def test_facade_batch_parity_with_rerank(ds):
+    """The two-stage (quantized traverse + exact re-rank) facade search is
+    batch-major end to end and batch-composition invariant."""
+    index = AnnIndex.build(ds.base, IndexSpec(degree=12, passes=1,
+                                              quant="int8"))
+    params = SearchParams(k=K, queue_len=32, max_steps=96,
+                          backend="ref_int8", rerank_k=2 * K)
+    q = np.asarray(ds.queries)
+    full = index.search(q, params)
+    sub = index.search(q[:3], params)
+    np.testing.assert_array_equal(np.asarray(full.ids)[:3],
+                                  np.asarray(sub.ids))
+    np.testing.assert_array_equal(np.asarray(full.dists)[:3],
+                                  np.asarray(sub.dists))
+    assert recall_at_k(np.asarray(full.ids), ds.gt_ids, K) >= 0.9
+
+
+def test_engine_inherits_batch_major_path(ds):
+    """AnnEngine serves through the index's batch-major searchers: padded
+    bucket execution is bit-identical to direct AnnIndex.search."""
+    index = AnnIndex.build(ds.base, IndexSpec(degree=12, passes=1))
+    params = SearchParams(k=K, queue_len=32, max_steps=96,
+                          algorithm="speedann", num_walkers=2)
+    engine = index.serve(params, bucket_sizes=(2, 4, 8))
+    direct = index.search(ds.queries, params)
+    for bsz in (1, 3, 8):
+        res = engine.search(ds.queries[:bsz])
+        np.testing.assert_array_equal(res.ids,
+                                      np.asarray(direct.ids)[:bsz])
+        np.testing.assert_array_equal(res.dists,
+                                      np.asarray(direct.dists)[:bsz])
+    assert engine.jit_cache_size <= 3
+
+
+def test_max_norm_entry_policy_mips(ds, tmp_path):
+    """IndexSpec(entry_policy='max_norm') seeds ip traversals at the
+    max-norm vertex, reaches reference recall, and round-trips."""
+    rng = np.random.RandomState(3)
+    base = np.asarray(ds.base, np.float32) \
+        * np.exp(rng.randn(ds.base.shape[0], 1) * 0.6).astype(np.float32)
+    spec = IndexSpec(metric="ip", degree=12, passes=1,
+                     entry_policy="max_norm")
+    index = AnnIndex.build(base, spec)
+    norms = np.linalg.norm(base, axis=1)
+    assert int(index.graph.medoid) == int(np.argmax(norms))
+    gt, _ = index.exact(ds.queries, K)
+    res = index.search(ds.queries, SearchParams(k=K, queue_len=64,
+                                                max_steps=128))
+    assert recall_at_k(np.asarray(res.ids), gt, K) >= 0.9
+    # the policy is build-time state: persisted with the spec + medoid
+    path = index.save(str(tmp_path / "maxnorm"))
+    loaded = AnnIndex.load(path)
+    assert loaded.spec.entry_policy == "max_norm"
+    assert int(loaded.graph.medoid) == int(index.graph.medoid)
+    # default-policy artifacts must NOT carry the key: readers predating
+    # entry_policy construct IndexSpec(**spec_json) and would crash on it
+    default_index = AnnIndex.build(base, IndexSpec(metric="ip", degree=12,
+                                                   passes=1))
+    dpath = default_index.save(str(tmp_path / "default"))
+    import json as _json
+    spec_json = _json.loads(str(np.load(dpath)["spec"]))
+    assert "entry_policy" not in spec_json
+    assert AnnIndex.load(dpath).spec.entry_policy == "medoid"
+    # ...and validated at construction
+    with pytest.raises(ValueError, match="max_norm"):
+        IndexSpec(metric="l2", entry_policy="max_norm")
+    with pytest.raises(ValueError, match="entry_policy"):
+        IndexSpec(entry_policy="bogus")

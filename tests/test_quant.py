@@ -117,9 +117,10 @@ def test_int8_distances_within_scheme_tolerance(metric, per_dim):
     g = quantized_graph(x, spec)
     dist_fn = resolve_backend(SearchConfig(metric=metric,
                                            dist_backend="ref_int8"))
-    nbr_ids = jnp.arange(40, dtype=jnp.int32).reshape(4, 10)
-    got = np.asarray(dist_fn(g, jnp.zeros((4,), jnp.int32), nbr_ids,
-                             jnp.asarray(q))).reshape(-1)
+    # batch-major DistFn contract: (B, M, R) ids, (B, d) queries
+    nbr_ids = jnp.arange(40, dtype=jnp.int32).reshape(1, 4, 10)
+    got = np.asarray(dist_fn(g, jnp.zeros((1, 4), jnp.int32), nbr_ids,
+                             jnp.asarray(q)[None, :])).reshape(-1)
 
     x_hat = np.asarray(dequantize(g.codes, spec, g.scales))
     if per_dim:
@@ -161,9 +162,9 @@ def test_rowgather_int8_matches_ref_int8(metric):
     ref_fn = resolve_backend(SearchConfig(metric=metric,
                                           dist_backend="ref_int8"))
     for b in range(2):
-        want = np.asarray(ref_fn(g, jnp.zeros((1,), jnp.int32),
-                                 ids[b].reshape(1, -1),
-                                 jnp.asarray(q[b]))).reshape(-1)
+        want = np.asarray(ref_fn(g, jnp.zeros((1, 1), jnp.int32),
+                                 ids[b].reshape(1, 1, -1),
+                                 jnp.asarray(q[b])[None, :])).reshape(-1)
         np.testing.assert_allclose(got[b], want, rtol=1e-5, atol=1e-5)
     # padded ids (>= N) are +inf in both
     assert np.all(np.isinf(got[np.asarray(ids) >= 40]))
@@ -176,8 +177,9 @@ def test_bf16_distances_close_to_exact():
     g = quantized_graph(x, spec)
     dist_fn = resolve_backend(SearchConfig(metric="l2",
                                            dist_backend="ref_bf16"))
-    got = np.asarray(dist_fn(g, jnp.zeros((4,), jnp.int32),
-                             jnp.arange(40, dtype=jnp.int32).reshape(4, 10),
-                             jnp.asarray(q))).reshape(-1)
+    got = np.asarray(dist_fn(
+        g, jnp.zeros((1, 4), jnp.int32),
+        jnp.arange(40, dtype=jnp.int32).reshape(1, 4, 10),
+        jnp.asarray(q)[None, :])).reshape(-1)
     np.testing.assert_allclose(got, exact_dist(x, q, "l2"), rtol=2e-2,
                                atol=2e-2)
