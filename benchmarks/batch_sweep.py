@@ -21,6 +21,14 @@ Two per-query metrics per row:
   the batch dimension amortizes; it is the number that must DECREASE with
   B for the batch-major refactor to be paying off on a backend.
 
+Each row also carries the cross-query frontier-overlap counters
+(``SearchStats.uniq_comps`` / ``batch_dup_comps``, first-toucher
+attribution): ``uniq_comps`` is how many rows a batch-deduplicating gather
+actually fetches, ``dist_comps`` how many a per-lane gather fetches, and
+``batch_dup_ratio`` = dup/dist the share of gathers dedup elides — the
+ratio GROWS with B as frontiers overlap more, which is the dedup_gather
+backend's scaling argument in one number.
+
 On this CPU container the Pallas backends run in interpret mode, so their
 absolute numbers measure the emulation; the ``ref`` backend is the
 apples-to-apples amortization signal until a TPU session re-runs the sweep
@@ -44,7 +52,7 @@ from repro.kernels import ops as kops
 
 K = 10
 BATCHES = (1, 8, 64, 256)
-BACKENDS = ("ref", "rowgather")
+BACKENDS = ("ref", "rowgather", "dedup_gather")
 PARAMS = SearchParams(k=K, queue_len=32, m_max=4, max_steps=96,
                       algorithm="topm")
 
@@ -61,7 +69,19 @@ def sweep(out_path: str = "BENCH_dist_backend.json",
     rows = []
     for backend in backends:
         fn = index.searcher(PARAMS.with_(backend=backend))
-        for bsz in batches:
+        run_batches = batches
+        if backend.startswith("dedup") and kops.INTERPRET:
+            # the dedup kernel trades gathers for a (uniques x B) reduce
+            # grid — free on the MXU, but interpret-mode emulation walks it
+            # cell by cell, so wall clock scales ~B^2; cap the sweep where
+            # emulation stays tractable (a TPU session lifts this)
+            run_batches = tuple(b for b in batches if b <= 64)
+            dropped = tuple(b for b in batches if b > 64)
+            if dropped:
+                print(f"bench_batch_{backend}: skipping B={dropped} "
+                      "(interpret-mode emulation; run compiled for full "
+                      "range)")
+        for bsz in run_batches:
             queries = jnp.asarray(ds.queries[:bsz])
             ids, _, stats = fn(queries)
             us = time_batched(fn, queries)
@@ -70,6 +90,9 @@ def sweep(out_path: str = "BENCH_dist_backend.json",
             # lanes ride along masked, so B×max(steps) is the lane-step
             # count the one-launch-per-step engine actually paid for
             lane_steps = bsz * max(int(steps.max()), 1)
+            dist_comps = int(np.sum(np.asarray(stats.dist_comps)))
+            uniq_comps = int(np.sum(np.asarray(stats.uniq_comps)))
+            dup_comps = int(np.sum(np.asarray(stats.batch_dup_comps)))
             row = {
                 "searcher": "topm",
                 "backend": backend,
@@ -83,6 +106,13 @@ def sweep(out_path: str = "BENCH_dist_backend.json",
                 "us_per_lane_step": us / lane_steps,
                 "steps_mean": float(steps.mean()),
                 "steps_max": int(steps.max()),
+                # cross-query overlap: unique-gather count <= candidate
+                # count, with the dedup ratio improving as B grows
+                "dist_comps": dist_comps,
+                "uniq_comps": uniq_comps,
+                "batch_dup_comps": dup_comps,
+                "batch_dup_ratio": (dup_comps / dist_comps
+                                    if dist_comps else 0.0),
                 "recall_at_k": recall_at_k(
                     np.asarray(ids), ds.gt_ids[:bsz], K),
             }
@@ -90,6 +120,7 @@ def sweep(out_path: str = "BENCH_dist_backend.json",
             print(f"bench_batch_{backend}_B{bsz},"
                   f"{row['us_per_query']:.1f},"
                   f"us_per_lane_step={row['us_per_lane_step']:.2f};"
+                  f"dup_ratio={row['batch_dup_ratio']:.3f};"
                   f"recall={row['recall_at_k']:.3f}")
 
     return write_trajectory(out_path, "dist_backend", rows, _row_key)

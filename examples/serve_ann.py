@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.ann import AnnIndex, IndexSpec, SearchParams
 from repro.data import make_vector_dataset
+from repro.kernels.registry import available_backends
 
 
 def main():
@@ -49,8 +50,7 @@ def main():
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--recall-target", type=float, default=0.9)
     ap.add_argument("--dist-backend", default="ref",
-                    choices=("ref", "rowgather", "dma", "ref_int8",
-                             "rowgather_int8", "ref_bf16"))
+                    choices=tuple(available_backends()))
     ap.add_argument("--metric", default="l2",
                     choices=("l2", "ip", "cosine"))
     ap.add_argument("--quant", default="none",

@@ -33,7 +33,7 @@ from repro.core import queue as fq
 from repro.core import visited as vs
 from repro.core.graph import (PaddedCSR, fetch_neighbor_vectors,
                               gather_neighbor_ids)
-from repro.core.metrics import SearchStats
+from repro.core.metrics import SearchStats, batch_unique_counts
 
 # dist_fn(graph, active_ids (B, M), nbr_ids (B, M, R), queries (B, d))
 # -> (B, M, R) distances, float32, smaller = closer, +inf for padded ids.
@@ -123,14 +123,22 @@ def expand_batch(
     m_max: int,
     m: jax.Array | int,
     dist_fn: DistFn = dist_l2,
-) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
+    lane_mask: Optional[jax.Array] = None,
+) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array, jax.Array]:
     """One batch-major neighbor-expansion round (Algorithm 1 lines 6–13,
     width m, all B queries at once).
 
     ``frontier``/``visited`` carry a leading (B,) axis; ``m`` may be scalar
     or per-query (B,).  The ONLY cross-lane fusion is the distance call:
     one ``dist_fn`` launch covers the whole (B, m_max, R) candidate grid.
-    Returns (frontier', visited', update_positions (B,), n_comps (B,)).
+    Returns (frontier', visited', update_positions (B,), n_comps (B,),
+    n_uniq (B,)) where ``n_uniq`` is the first-toucher count feeding
+    ``SearchStats.uniq_comps`` — fresh candidates whose id no lower-index
+    lane expands this round.  ``lane_mask`` (B,) bool excludes lanes whose
+    state the caller will discard (converged/step-budget-dead lanes still
+    ride in the batch as no-op work, but they must not claim first-toucher
+    credit away from live lanes — the counters stay exact and front-slice
+    invariant).
     """
     bsz = queries.shape[0]
     frontier, active_ids, active_valid = fq.select_unchecked_batch(
@@ -148,8 +156,10 @@ def expand_batch(
     dists = jnp.where(fresh, dists, jnp.inf)
     cand_ids = jnp.where(fresh, flat, fq.INVALID_ID)
     frontier, up_pos, _ = fq.insert_batch(frontier, cand_ids, dists)
+    counted = fresh if lane_mask is None else fresh & lane_mask[:, None]
+    n_uniq = batch_unique_counts(flat, counted)
     return frontier, visited, up_pos, \
-        jnp.sum(fresh, axis=-1).astype(jnp.int32)
+        jnp.sum(fresh, axis=-1).astype(jnp.int32), n_uniq
 
 
 def expand(
@@ -165,6 +175,8 @@ def expand(
     block): lifts the query to a B=1 batch for the batch-major ``dist_fn``.
 
     Returns (frontier', visited', update_position, n_distance_comps).
+    A single lane has no cross-lane overlap (uniq == comps), so no
+    first-toucher count is returned here.
     """
     frontier, active_ids, active_valid = fq.select_unchecked(
         frontier, m_max, m)
@@ -211,8 +223,13 @@ def _init_state_batch(
     v = graph.vectors[s].astype(jnp.float32)               # (B, d)
     d0 = point_dist(v, queries, cfg.metric)[:, None]
     frontier, _, _ = fq.insert_batch(frontier, s[:, None], d0)
+    # the seed computation participates in first-toucher accounting too: a
+    # shared entry point (the medoid) is the batch's first overlapping row
+    seed_uniq = batch_unique_counts(s[:, None], jnp.ones((bsz, 1), bool))
     stats = SearchStats.zero_batch(bsz)._replace(
-        dist_comps=jnp.ones((bsz,), jnp.int32))
+        dist_comps=jnp.ones((bsz,), jnp.int32),
+        uniq_comps=seed_uniq,
+        batch_dup_comps=jnp.int32(1) - seed_uniq)
     return _TopMState(frontier, visited, stats)
 
 
@@ -256,13 +273,16 @@ def search_topm_batch(
         alive = lanes_live(s)
         live = fq.has_unchecked_batch(s.frontier).astype(jnp.int32)
         m = staged_m(s.stats.steps, cfg)
-        frontier, visited, _, n = expand_batch(
-            graph, queries, s.frontier, s.visited, cfg.m_max, m, dist_fn)
+        frontier, visited, _, n, uniq = expand_batch(
+            graph, queries, s.frontier, s.visited, cfg.m_max, m, dist_fn,
+            lane_mask=alive)
         stats = s.stats._replace(
             steps=s.stats.steps + live,
             local_steps=s.stats.local_steps
             + jnp.minimum(m, jnp.int32(cfg.m_max)) * live,
             dist_comps=s.stats.dist_comps + n,
+            uniq_comps=s.stats.uniq_comps + uniq,
+            batch_dup_comps=s.stats.batch_dup_comps + (n - uniq),
             crit_rounds=s.stats.crit_rounds + live,
         )
         return lane_select(alive, _TopMState(frontier, visited, stats), s)

@@ -28,11 +28,32 @@ class SearchStats(NamedTuple):
     # critical-path expansions: sequential rounds (walkers run in parallel
     # within a round) — the latency model for W-core/W-device hardware
     crit_rounds: jax.Array
+    # cross-lane frontier-overlap counters (batch-major engine).  Every
+    # distance computation of a step is attributed to exactly one bucket by
+    # FIRST-TOUCHER order over the step's flattened expansion lanes:
+    #   uniq_comps      — the lane was the first (lowest-index) lane to
+    #                     compute this candidate id this step; under a
+    #                     batch-deduplicating backend this lane pays the row
+    #                     gather.
+    #   batch_dup_comps — an earlier lane already computed the id this step;
+    #                     the row gather is redundant — the reuse the
+    #                     "dedup_gather" backend converts into VMEM hits.
+    # Invariant: uniq_comps + batch_dup_comps == dist_comps per lane, always
+    # (the traversal seed counts too).  A lane's counters depend only on
+    # EARLIER lanes, so they are invariant under front-slicing the batch.
+    # At B=1 every top-M computation is unique; Speed-ANN walker lanes share
+    # the flattened expansion grid, so cross-WALKER duplicates within one
+    # query still count as batch_dup_comps (a dedup backend gathers across
+    # walkers too).  Unlike the other fields they are defined RELATIVE TO
+    # THE BATCH, so vmapping the per-query search yields the B=1 values,
+    # not the cross-query ones.
+    uniq_comps: jax.Array
+    batch_dup_comps: jax.Array
 
     @staticmethod
     def zero():
         z = jnp.zeros((), jnp.int32)
-        return SearchStats(z, z, z, z, z, z)
+        return SearchStats(z, z, z, z, z, z, z, z)
 
     @staticmethod
     def zero_batch(batch: int):
@@ -40,8 +61,45 @@ class SearchStats(NamedTuple):
         batch-major engine's stats carry (lanes stay exact under the
         active-query masking)."""
         z = jnp.zeros((batch,), jnp.int32)
-        return SearchStats(z, z, z, z, z, z)
+        return SearchStats(z, z, z, z, z, z, z, z)
+
+    # fields whose values are defined relative to the whole batch (see
+    # above); parity harnesses that compare the batch-major engine against
+    # vmapped per-query searches must treat these separately
+    BATCH_RELATIVE = ("uniq_comps", "batch_dup_comps")
 
     def summary(self) -> dict:
         return {k: float(np.mean(np.asarray(v)))
                 for k, v in self._asdict().items()}
+
+
+# sentinel for masked-out candidate slots in first-toucher counting; real
+# graph ids are always < n_nodes < 2**31 - 1
+_UNIQ_SENTINEL = jnp.int32(2**31 - 1)
+
+
+def batch_unique_counts(ids: jax.Array, counted: jax.Array) -> jax.Array:
+    """First-toucher attribution of one step's expansion across lanes.
+
+    ``ids`` (B, C) candidate ids, ``counted`` (B, C) bool — the candidates
+    that actually cost a distance computation this step (fresh AND on a live
+    lane).  Returns (B,) int32: per lane, how many of its counted candidates
+    were NOT counted by any lower-index lane — the number of row gathers a
+    batch-deduplicating backend would charge this lane.  Exact: a stable
+    sort by id keeps the flattened row-major (= lane) order inside every id
+    group, so the group's first element belongs to the first touching lane.
+
+    Per-lane ``counted`` candidates are assumed id-distinct (the visited
+    structures dedup in-lane before any distance is counted), so
+    ``sum(out) == |{distinct ids}|`` and ``out <= sum(counted, axis=-1)``
+    elementwise with equality iff no id is shared across lanes.
+    """
+    b, c = ids.shape
+    flat = jnp.where(counted, ids, _UNIQ_SENTINEL).reshape(-1)
+    lane = jnp.repeat(jnp.arange(b, dtype=jnp.int32), c)
+    sorted_ids, sorted_lane = jax.lax.sort((flat, lane), num_keys=1,
+                                           is_stable=True)
+    prev = jnp.concatenate([_UNIQ_SENTINEL[None] - 1, sorted_ids[:-1]])
+    first = (sorted_ids != _UNIQ_SENTINEL) & (sorted_ids != prev)
+    return jnp.zeros((b,), jnp.int32).at[sorted_lane].add(
+        first.astype(jnp.int32))

@@ -42,7 +42,7 @@ from repro.core import queue as fq
 from repro.core import visited as vs
 from repro.core.bfis import (DistFn, _seed_ids, expand_batch, lane_select,
                              point_dist, resolve_dist_fn, staged_m)
-from repro.core.metrics import SearchStats
+from repro.core.metrics import SearchStats, batch_unique_counts
 
 
 class _LocalState(NamedTuple):
@@ -52,6 +52,9 @@ class _LocalState(NamedTuple):
     lstep: jax.Array          # (B,) local rounds taken this segment
     do_merge: jax.Array       # (B,) bool — CheckMetrics flag
     comps: jax.Array          # (B,) distance computations this segment
+    uniq: jax.Array           # (B,) first-toucher comps this segment (over
+    #                           the whole flattened B·W walker grid — the
+    #                           rows a batch-dedup backend would gather)
 
 
 class _GlobalState(NamedTuple):
@@ -73,7 +76,8 @@ def check_metrics(up_pos: jax.Array, active: jax.Array, cfg: SearchConfig
 def _local_segment_batch(
     graph, queries: jax.Array, locals_: fq.Frontier, visited: vs.Visited,
     active: jax.Array, cfg: SearchConfig, dist_fn: DistFn,
-) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array]:
+    query_mask: Optional[jax.Array] = None,
+) -> Tuple[fq.Frontier, vs.Visited, jax.Array, jax.Array, jax.Array]:
     """Lines 11–22 batch-major: collective-free private best-first searches
     for every query's walker pool at once.
 
@@ -81,8 +85,10 @@ def _local_segment_batch(
     batch-major expansion — ONE distance launch for the whole batch's
     walkers.  Per query, the segment runs until CheckMetrics fires, every
     walker exhausts its queue, or the ``local_steps`` budget is hit;
-    finished queries are masked no-ops.  Returns (locals', visited',
-    rounds (B,), comps (B,))."""
+    finished queries are masked no-ops.  ``query_mask`` (B,) excludes
+    queries whose state the caller discards from first-toucher accounting
+    (see ``expand_batch``).  Returns (locals', visited', rounds (B,),
+    comps (B,), uniq (B,))."""
     w = cfg.num_walkers
     cap = cfg.queue_len
     bsz = queries.shape[0]
@@ -107,15 +113,19 @@ def _local_segment_batch(
 
     def body(s: _LocalState):
         alive = lanes_live(s)
+        counted_q = alive if query_mask is None else alive & query_mask
         had_work = fq.has_unchecked_batch(s.locals_) & is_active_mask()
         # ONE batch-major expansion over all B·W walker lanes (M=1 each)
         fr = jax.tree.map(flatten_bw, s.locals_)
         vis = jax.tree.map(flatten_bw, s.visited)
-        fr, vis, up, n = expand_batch(graph, q_rep, fr, vis, 1, 1, dist_fn)
+        fr, vis, up, n, uniq = expand_batch(
+            graph, q_rep, fr, vis, 1, 1, dist_fn,
+            lane_mask=jnp.repeat(counted_q, w))
         locals2 = jax.tree.map(unflatten_bw, fr)
         visited2 = jax.tree.map(unflatten_bw, vis)
         up = up.reshape(bsz, w)
         n = n.reshape(bsz, w)
+        uniq = uniq.reshape(bsz, w)
         # walkers with no unchecked candidates saturate at L (stuck)
         up = jnp.where(had_work, up, cap).astype(jnp.int32)
         do_merge = jax.vmap(
@@ -123,7 +133,8 @@ def _local_segment_batch(
         new = _LocalState(
             locals_=locals2, visited=visited2, up_pos=up,
             lstep=s.lstep + 1, do_merge=do_merge,
-            comps=s.comps + jnp.sum(jnp.where(had_work, n, 0), axis=-1))
+            comps=s.comps + jnp.sum(jnp.where(had_work, n, 0), axis=-1),
+            uniq=s.uniq + jnp.sum(jnp.where(had_work, uniq, 0), axis=-1))
         return lane_select(alive, new, s)
 
     init = _LocalState(
@@ -131,9 +142,10 @@ def _local_segment_batch(
         up_pos=jnp.zeros((bsz, w), jnp.int32),
         lstep=jnp.zeros((bsz,), jnp.int32),
         do_merge=jnp.zeros((bsz,), bool),
-        comps=jnp.zeros((bsz,), jnp.int32))
+        comps=jnp.zeros((bsz,), jnp.int32),
+        uniq=jnp.zeros((bsz,), jnp.int32))
     out = jax.lax.while_loop(cond, body, init)
-    return out.locals_, out.visited, out.lstep, out.comps
+    return out.locals_, out.visited, out.lstep, out.comps, out.uniq
 
 
 def search_speedann_batch(
@@ -165,17 +177,20 @@ def search_speedann_batch(
     # scatter has a full frontier to distribute (paper Fig. 4: the search
     # fans out from P's neighbors; without this, NoSync would degenerate to
     # a single busy walker).
-    frontier, visited0, _, n0 = expand_batch(
+    frontier, visited0, _, n0, uniq0 = expand_batch(
         graph, queries, frontier, visited0, 1, 1, dist_fn)
     # replicate the seed visited map to all walkers (consistent at t=0)
     visited = jax.tree.map(
         lambda t: jnp.broadcast_to(t[:, None], (bsz, w) + t.shape[1:]),
         visited0)
 
+    seed_uniq = batch_unique_counts(s0[:, None], jnp.ones((bsz, 1), bool))
     init = _GlobalState(
         frontier=frontier, visited=visited,
         stats=SearchStats.zero_batch(bsz)._replace(
-            dist_comps=jnp.int32(1) + n0))
+            dist_comps=jnp.int32(1) + n0,
+            uniq_comps=seed_uniq + uniq0,
+            batch_dup_comps=(jnp.int32(1) - seed_uniq) + (n0 - uniq0)))
 
     def lanes_live(s: _GlobalState) -> jax.Array:
         return fq.has_unchecked_batch(s.frontier) \
@@ -194,8 +209,9 @@ def search_speedann_batch(
         locals_ = jax.vmap(
             lambda f, a: fq.scatter_round_robin(f, w, a))(s.frontier, m)
         # Lines 11–22: collective-free local searches + CheckMetrics.
-        locals_, visited, rounds, comps = _local_segment_batch(
-            graph, queries, locals_, s.visited, m, cfg, dist_fn)
+        locals_, visited, rounds, comps, uniq = _local_segment_batch(
+            graph, queries, locals_, s.visited, m, cfg, dist_fn,
+            query_mask=alive)
         # Line 23: merge local queues into the global queue; §4.4: visited
         # maps reach eventual consistency here.
         merged, _ = jax.vmap(fq.merge_frontiers)(locals_)
@@ -209,6 +225,8 @@ def search_speedann_batch(
             dup_comps=s.stats.dup_comps + jnp.maximum(n_dups, 0),
             syncs=s.stats.syncs + live,
             crit_rounds=s.stats.crit_rounds + rounds,
+            uniq_comps=s.stats.uniq_comps + uniq,
+            batch_dup_comps=s.stats.batch_dup_comps + (comps - uniq),
         )
         return lane_select(
             alive, _GlobalState(frontier=merged, visited=visited,

@@ -1,0 +1,277 @@
+"""Batch-deduplicating gather + distance Pallas backends.
+
+PR 5 made every global step ONE (B, C) distance launch, but a hot vertex
+sitting on several queries' frontiers is still gathered once PER LANE that
+expands it.  NDSEARCH's observation (PAPERS.md) is that the gather — not
+the reduction — bounds expansion throughput, so the right unit of work is
+the UNIQUE row set of the whole batch step:
+
+  1. **dedup** — sort the flattened (B·C,) candidate ids (stable), mark
+     first occurrences, and compact the unique ids into a fixed-size
+     (T = B·C, padded to the gather tile with the ``n_nodes`` sentinel)
+     buffer; an inverse map remembers each lane slot's unique index.  All
+     static shapes — the pass jits cleanly inside the traversal loop.
+  2. **gather+reduce** — a scalar-prefetch Pallas kernel (the ``rowgather``
+     idiom: prefetched ids drive the table BlockSpec index_map) on a
+     (T, B) grid whose row index_map IGNORES the inner query index: each
+     distinct row is fetched HBM→VMEM once and stays resident for its
+     whole query sweep → a (T, B) distance matrix.  Sentinel slots clamp
+     to row N−1; repeated grid steps on the same block skip the re-fetch,
+     so the padded tail is ~free.
+  3. **scatter** — lane (b, c) reads back ``D[inv[b, c], b]``.
+
+Row reductions use the same f32 op order as ``ref``/``rowgather``, and
+every (row, query) pair is still reduced exactly once, so results are
+BIT-IDENTICAL to the non-dedup backends — the sort/unique pass only
+changes how many times a row crosses the memory hierarchy.  The counters
+``SearchStats.uniq_comps`` / ``batch_dup_comps`` (first-toucher
+attribution, ``core.metrics.batch_unique_counts``) measure exactly the
+gather traffic this backend saves.
+
+``dedup_gather_int8`` composes with ``repro.quant``: the unique rows are
+gathered from the int8 codes table (per-vector scales, int32-accumulated
+integer dot, one f32 rescale — bit-identical to ``ref_int8``), so the 4x
+payload shrink compounds with the dedup factor.
+
+Both register with ``kernels.registry`` — selecting them is purely
+``SearchConfig(dist_backend="dedup_gather")``; no search code changes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.registry import pad_ids_to_tile, register_backend
+from repro.quant.codec import quantize_query
+
+# unique-buffer tile: sentinel-padded tail slots re-fetch the same clamped
+# row, which the Pallas pipeline elides, so over-padding is cheap
+TILE = 8
+
+
+def unique_ids_inverse(
+    ids: jax.Array, n_nodes: int, tile: int = TILE,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Static-shape sort/unique pass over a (B, C) candidate grid.
+
+    Every id >= ``n_nodes`` (padding) is folded onto the single sentinel
+    ``n_nodes`` before deduplication.  Returns:
+
+    * ``uniq`` (T,) int32 — the distinct ids packed at the front, the rest
+      of the buffer filled with the sentinel; T = B·C rounded up to
+      ``tile`` (see :func:`registry.pad_ids_to_tile`).
+    * ``inv`` (B, C) int32 — ``uniq[inv[b, c]]`` folds back to
+      ``min(ids[b, c], n_nodes)``; the scatter map of step 3.
+    * ``n_uniq`` () int32 — how many REAL (non-sentinel) distinct ids the
+      batch step touches: the rows a dedup backend actually gathers.
+    """
+    bsz, c = ids.shape
+    t = bsz * c
+    sent = jnp.int32(n_nodes)
+    flat = jnp.where(ids < n_nodes, ids, sent).astype(jnp.int32).reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    sorted_ids = flat[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]])
+    rank = jnp.cumsum(first.astype(jnp.int32)) - 1         # uniq idx / elt
+    uniq = jnp.full((t,), sent, jnp.int32).at[rank].set(sorted_ids)
+    inv = jnp.zeros((t,), jnp.int32).at[order].set(rank).reshape(bsz, c)
+    n_uniq = jnp.sum(first & (sorted_ids < n_nodes)).astype(jnp.int32)
+    return pad_ids_to_tile(uniq, tile, n_nodes), inv, n_uniq
+
+
+# ---------------------------------------------------------------------------
+# f32 table kernel
+# ---------------------------------------------------------------------------
+
+def _dedup_kernel(uids_ref, row_ref, q_ref, out_ref, *, n_nodes: int,
+                  metric: str):
+    # identical per-pair math to l2dist._rowgather_kernel — a (d,)-vector
+    # reduction per (row, query) pair — so results are bit-identical to the
+    # non-dedup backends (a (B, d)-block reduction would drift in the last
+    # ulp: XLA picks a different accumulation order per shape)
+    i = pl.program_id(0)
+    sid = uids_ref[i]
+    row = row_ref[0, :].astype(jnp.float32)                # (d,)
+    q = q_ref[0, :].astype(jnp.float32)                    # (d,)
+    if metric == "ip":
+        dist = -jnp.sum(row * q)
+    else:
+        diff = row - q
+        dist = jnp.sum(diff * diff)
+    out_ref[0, 0] = jnp.where(sid < n_nodes, dist, jnp.float32(jnp.inf))
+
+
+def dedupdist(
+    table: jax.Array, ids: jax.Array, queries: jax.Array,
+    *, interpret: bool | None = None, metric: str = "l2", tile: int = TILE,
+) -> jax.Array:
+    """(N,d) table, (B,C) ids, (B,d) queries -> (B,C) f32 distances with
+    each DISTINCT candidate row gathered once for the whole batch.
+
+    Same contract as :func:`l2dist.l2dist_rowgather` (padded ids >= N give
+    +inf; "ip" = negative inner product) and bit-identical to it.
+    """
+    from repro.kernels import ops
+    itp = ops.INTERPRET if interpret is None else interpret
+    n, d = table.shape
+    bsz, _ = ids.shape
+    uniq, inv, _ = unique_ids_inverse(ids, n, tile)
+    t = uniq.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t, bsz),
+        in_specs=[
+            # the row block's index_map ignores the inner query index, so
+            # the pipeline fetches each unique row ONCE and keeps it in
+            # VMEM for the whole b-sweep (sentinel slots clamp to the last
+            # row and are masked to +inf in-kernel)
+            pl.BlockSpec(
+                (1, d), lambda i, b, uids_ref: (jnp.minimum(
+                    uids_ref[i], n - 1), 0)),
+            pl.BlockSpec((1, d), lambda i, b, uids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, b, uids_ref: (i, b)),
+    )
+    kernel = functools.partial(_dedup_kernel, n_nodes=n, metric=metric)
+    dmat = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, bsz), jnp.float32),
+        interpret=itp,
+    )(uniq, table, queries)
+    # scatter: lane (b, c) reads its unique row's distance to query b
+    return dmat[inv, jnp.arange(bsz, dtype=jnp.int32)[:, None]]
+
+
+# ---------------------------------------------------------------------------
+# int8 codes kernel (per-vector scales; composes with repro.quant)
+# ---------------------------------------------------------------------------
+
+def _dedup_int8_kernel(uids_ref, row_ref, scale_ref, qc_ref, qmeta_ref,
+                       out_ref, *, n_nodes: int, metric: str):
+    # per-pair math mirrors quant.kernels._rowgather_int8_kernel exactly
+    # (int32-accumulated integer dot, ONE f32 rescale) — bit-identical to
+    # ref_int8 / rowgather_int8
+    i = pl.program_id(0)
+    sid = uids_ref[i]
+    row = row_ref[0, :].astype(jnp.int32)                  # int8 -> i32
+    qc = qc_ref[0, :]                                      # i32 query codes
+    acc = jnp.sum(row * qc)                                # i32 accumulation
+    s = scale_ref[0, 0]                                    # per-vector scale
+    xq = s * qmeta_ref[0, 0] * acc.astype(jnp.float32)     # one f32 rescale
+    if metric == "ip":
+        dist = -xq
+    else:
+        rn2 = jnp.sum(row * row)                           # i32 accumulation
+        dist = jnp.maximum(
+            s * s * rn2.astype(jnp.float32) - 2.0 * xq + qmeta_ref[0, 1],
+            0.0)
+    out_ref[0, 0] = jnp.where(sid < n_nodes, dist, jnp.float32(jnp.inf))
+
+
+def dedupdist_int8(
+    codes: jax.Array, scales: jax.Array, ids: jax.Array, queries: jax.Array,
+    *, interpret: bool | None = None, metric: str = "l2", tile: int = TILE,
+) -> jax.Array:
+    """int8 variant of :func:`dedupdist`: unique rows gather from the
+    (N,d) int8 codes table + (N,1) per-vector scales, so the 4x payload
+    shrink compounds with the dedup factor.  Bit-identical to ``ref_int8``
+    (same int32-accumulate + single-f32-rescale op order)."""
+    from repro.kernels import ops
+    itp = ops.INTERPRET if interpret is None else interpret
+    n, d = codes.shape
+    bsz, _ = ids.shape
+    if scales.shape != (n, 1):
+        raise ValueError(
+            f"dedupdist_int8 needs per-vector scales of shape ({n}, 1), "
+            f"got {scales.shape}; per-dimension scales are served by the "
+            f"'ref_int8' backend")
+    qc, qs = quantize_query(queries)                       # (B,d) i32, (B,1)
+    q2 = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    qmeta = jnp.concatenate([qs, q2], axis=1)              # (B, 2) f32
+    uniq, inv, _ = unique_ids_inverse(ids, n, tile)
+    t = uniq.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t, bsz),
+        in_specs=[
+            # code row + its scale row stream once per unique id (their
+            # index_maps ignore the inner query index)
+            pl.BlockSpec(
+                (1, d), lambda i, b, uids_ref: (jnp.minimum(
+                    uids_ref[i], n - 1), 0)),
+            pl.BlockSpec(
+                (1, 1), lambda i, b, uids_ref: (jnp.minimum(
+                    uids_ref[i], n - 1), 0)),
+            pl.BlockSpec((1, d), lambda i, b, uids_ref: (b, 0)),
+            pl.BlockSpec((1, 2), lambda i, b, uids_ref: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, b, uids_ref: (i, b)),
+    )
+    kernel = functools.partial(_dedup_int8_kernel, n_nodes=n,
+                               metric="ip" if metric in ("ip", "cosine")
+                               else "l2")
+    dmat = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, bsz), jnp.float32),
+        interpret=itp,
+    )(uniq, codes, scales, qc, qmeta)
+    return dmat[inv, jnp.arange(bsz, dtype=jnp.int32)[:, None]]
+
+
+# ---------------------------------------------------------------------------
+# registry entries — zero search-code changes
+# ---------------------------------------------------------------------------
+
+def make_dedup_dist_fn(metric: str = "l2", tile: int = TILE):
+    """Batch-major dedup DistFn: the step's whole (B, M·R) candidate grid
+    dedups into ONE unique-row gather launch."""
+    kmetric = "ip" if metric in ("ip", "cosine") else "l2"
+
+    def dist_fn(graph, active_ids, nbr_ids, queries):
+        b, m, r = nbr_ids.shape
+        d = dedupdist(graph.vectors, nbr_ids.reshape(b, m * r), queries,
+                      metric=kmetric, tile=tile)
+        return d.reshape(b, m, r)
+    return dist_fn
+
+
+def make_dedup_int8_dist_fn(metric: str = "l2", tile: int = TILE):
+    """int8-codes dedup DistFn (per-vector scales only, like
+    ``rowgather_int8``)."""
+    from repro.quant.kernels import require_codes
+
+    def dist_fn(graph, active_ids, nbr_ids, queries):
+        codes, scales = require_codes(graph, "int8")
+        if scales.shape[0] == 1:
+            raise NotImplementedError(
+                "dedup_gather_int8 implements the per-vector-scale integer "
+                "path; per-dimension scales are served by 'ref_int8'")
+        b, m, r = nbr_ids.shape
+        d = dedupdist_int8(codes, scales, nbr_ids.reshape(b, m * r),
+                           queries, metric=metric, tile=tile)
+        return d.reshape(b, m, r)
+    return dist_fn
+
+
+def _cfg_metric(cfg) -> str:
+    return getattr(cfg, "metric", "l2") or "l2"
+
+
+@register_backend("dedup_gather")
+def _dedup_backend(cfg):
+    return make_dedup_dist_fn(_cfg_metric(cfg))
+
+
+@register_backend("dedup_gather_int8")
+def _dedup_int8_backend(cfg):
+    return make_dedup_int8_dist_fn(_cfg_metric(cfg))

@@ -20,9 +20,15 @@ Built-in backends:
 * ``dma``       — explicit-DMA tile gather + MXU reduction; candidate counts
   are padded to the ``cfg.dma_group`` tile (padding ids map to +inf and are
   sliced off, so ragged M·R shapes are transparent to callers).
+* ``dedup_gather`` — batch-deduplicating gather (``kernels.dedup``): the
+  step's flattened (B·C,) candidate ids sort/unique first and each DISTINCT
+  row is gathered ONCE for the whole batch, reduced against the stacked
+  query block, and scattered back to lanes.  Bit-identical to ``ref``; the
+  saved gathers are exactly ``SearchStats.batch_dup_comps``.
 
-Quantized backends (``ref_int8`` | ``rowgather_int8`` | ``ref_bf16``, from
-``repro.quant.kernels``) gather from the index's int8/bf16 codes table
+Quantized backends (``ref_int8`` | ``rowgather_int8`` | ``dedup_gather_int8``
+| ``ref_bf16``, from ``repro.quant.kernels`` and ``kernels.dedup``) gather
+from the index's int8/bf16 codes table
 instead of the f32 vectors; they require an index built with
 ``IndexSpec(quant=...)`` and compose with the two-stage re-ranked search
 (``SearchParams.rerank_k``).
@@ -139,3 +145,6 @@ def _dma_backend(cfg):
 # __init__) keeps the quant package importable without this module and this
 # module the single place the backend catalogue is assembled
 import repro.quant.kernels as _quant_kernels  # noqa: E402,F401
+# the batch-dedup backends (dedup_gather / dedup_gather_int8) self-register
+# the same way
+import repro.kernels.dedup as _dedup_kernels  # noqa: E402,F401

@@ -242,6 +242,12 @@ class AnnEngine:
         self._bucket_latencies_ms: Dict[int, List[float]] = {}
         self._recall_sum = 0.0
         self._recall_n = 0
+        # traversal work totals over served (non-padding) lanes; the
+        # uniq/dup split is SearchStats' first-toucher attribution — the
+        # dup share is the gather traffic a dedup_gather backend saves
+        self.dist_comps_total = 0
+        self.uniq_comps_total = 0
+        self.batch_dup_comps_total = 0
 
     # -- jit cache ---------------------------------------------------------
 
@@ -394,6 +400,10 @@ class AnnEngine:
         self.queries_served += bsz
         self.requests_served += 1
         self._latencies_ms.append(ms)
+        self.dist_comps_total += int(np.sum(np.asarray(stats.dist_comps)))
+        self.uniq_comps_total += int(np.sum(np.asarray(stats.uniq_comps)))
+        self.batch_dup_comps_total += int(
+            np.sum(np.asarray(stats.batch_dup_comps)))
         ids_np = np.asarray(ids)
         if gt_ids is not None:
             self._recall_sum += recall_at_k(ids_np, gt_ids, self.cfg.k) * bsz
@@ -430,6 +440,14 @@ class AnnEngine:
             "jit_cache_size": float(self.jit_cache_size),
             "cache_hits": float(self.cache_hits),
             "cache_misses": float(self.cache_misses),
+            "dist_comps_total": float(self.dist_comps_total),
+            "uniq_comps_total": float(self.uniq_comps_total),
+            "batch_dup_comps_total": float(self.batch_dup_comps_total),
+            # share of distance computations whose row gather a batch-dedup
+            # backend skips (cross-lane frontier overlap of served traffic)
+            "batch_dup_ratio": (
+                self.batch_dup_comps_total / self.dist_comps_total
+                if self.dist_comps_total else 0.0),
         }
         if lat.size:
             out.update(self._percentiles(lat, "latency_"))

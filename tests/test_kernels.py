@@ -155,3 +155,66 @@ def test_search_with_pallas_dist_fn_matches_default():
     np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids_pal))
     np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_pal),
                                rtol=1e-5, atol=1e-5)
+
+
+# -- pad_ids_to_tile + dedup unique-pass edge cases -------------------------
+
+def test_pad_ids_to_tile_edges():
+    from repro.kernels.registry import pad_ids_to_tile
+
+    # exact tile boundary: returned array IS the input (no copy, no pad)
+    ids = jnp.arange(16, dtype=jnp.int32).reshape(2, 8)
+    assert pad_ids_to_tile(ids, 8, 100) is ids
+    # ragged: padded with the n_nodes sentinel on the last axis only
+    ids = jnp.arange(10, dtype=jnp.int32).reshape(2, 5)
+    out = pad_ids_to_tile(ids, 8, 100)
+    assert out.shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(out)[:, :5], np.asarray(ids))
+    np.testing.assert_array_equal(np.asarray(out)[:, 5:], 100)
+    # 1D buffers (the dedup unique buffer) pad the same way
+    out1 = pad_ids_to_tile(jnp.arange(3, dtype=jnp.int32), 8, 7)
+    assert out1.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(out1)[3:], 7)
+
+
+def test_dedup_unique_empty_after_masking():
+    """All-padding candidate grids (every id >= n_nodes) leave an EMPTY
+    unique set: the buffer is pure sentinel and distances all +inf."""
+    from repro.kernels.dedup import dedupdist, unique_ids_inverse
+
+    n, d, b, c = 20, 8, 3, 5
+    ids = jnp.full((b, c), n + 2, jnp.int32)
+    uniq, inv, n_uniq = unique_ids_inverse(ids, n)
+    assert int(n_uniq) == 0
+    assert (np.asarray(uniq) >= n).all()
+    table = jnp.asarray(np.random.RandomState(0).randn(n, d), jnp.float32)
+    q = jnp.asarray(np.random.RandomState(1).randn(b, d), jnp.float32)
+    assert np.isinf(np.asarray(dedupdist(table, ids, q))).all()
+
+
+def test_dedup_unique_count_on_tile_boundary():
+    """Unique count exactly at a tile multiple: no sentinel slot is added
+    beyond the buffer's fixed size, and the buffer stays tile-aligned."""
+    from repro.kernels.dedup import unique_ids_inverse
+
+    ids = jnp.arange(8, dtype=jnp.int32).reshape(1, 8)      # 8 distinct
+    uniq, inv, n_uniq = unique_ids_inverse(ids, 100, tile=8)
+    assert int(n_uniq) == 8 and uniq.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(uniq), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(inv), np.arange(8)[None, :])
+
+
+def test_dedup_n_nodes_smaller_than_tile():
+    """n_nodes < tile: clamping in the kernel index_map and sentinel
+    padding still agree with the reference."""
+    from repro.kernels.dedup import dedupdist
+    from repro.kernels.l2dist import l2dist_rowgather
+
+    rng = np.random.RandomState(2)
+    n, d, b, c = 3, 8, 2, 5                                # n < TILE=8
+    table = jnp.asarray(rng.randn(n, d), jnp.float32)
+    q = jnp.asarray(rng.randn(b, d), jnp.float32)
+    ids = jnp.asarray(rng.randint(0, n + 2, size=(b, c)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(dedupdist(table, ids, q)),
+        np.asarray(l2dist_rowgather(table, ids, q)))
