@@ -1,0 +1,559 @@
+"""jaxlint analyzer tests: seeded violations per rule family, suppression
+comments, config handling, and the CLI JSON contract.
+
+Every positive fixture plants exactly one violation and asserts the rule id,
+file, and line of the finding; every negative fixture is the minimal legal
+variant of the same code.  Fixtures live under a ``src/`` root inside
+``tmp_path`` so module names resolve the same way they do in the real tree
+(``fx.core.engine`` for ``src/fx/core/engine.py``).
+"""
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.jaxlint import cli                       # noqa: E402
+from tools.jaxlint.config import Config             # noqa: E402
+from tools.jaxlint.model import selected_rules      # noqa: E402
+from tools.jaxlint.project import Project           # noqa: E402
+
+
+def sweep(tmp_path, sources, select=None, static_attributes=()):
+    """Write fixture sources under ``tmp_path/src`` and run the analyzer.
+
+    ``sources`` maps ``src``-relative paths to (dedented) module text.
+    Returns the finding list, sorted by (path, line, rule).
+    """
+    for rel, text in sources.items():
+        p = tmp_path / "src" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    cfg = Config(static_attributes=list(static_attributes))
+    project = Project(cfg, root=tmp_path)
+    errors = project.add_paths([tmp_path / "src"])
+    assert not errors, errors
+    findings = []
+    for rule in selected_rules(select):
+        findings.extend(rule.check(project))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def only(findings, rule):
+    hits = [f for f in findings if f.rule == rule]
+    assert hits, f"expected a {rule} finding, got {findings}"
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# JL1 — tracer purity
+# ---------------------------------------------------------------------------
+
+def test_jl101_branch_on_traced_param_in_jit(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """}, select=["JL1"])
+    (f,) = only(findings, "JL101")
+    assert f.path == "src/fx/mod.py"
+    assert f.line == 5
+    assert not f.suppressed
+
+
+def test_jl101_reaches_through_cross_module_calls(tmp_path):
+    # the violation sits two calls away from the jit root, in another module
+    findings = sweep(tmp_path, {
+        "fx/helper.py": """\
+            def inner(v):
+                if v.sum() > 0:
+                    return v
+                return -v
+
+            def step(v):
+                return inner(v)
+        """,
+        "fx/mod.py": """\
+            import jax
+            from fx.helper import step
+
+            @jax.jit
+            def f(x):
+                return step(x)
+        """,
+    }, select=["JL1"])
+    (f,) = only(findings, "JL101")
+    assert f.path == "src/fx/helper.py"
+    assert f.line == 2
+
+
+def test_jl101_negative_static_contexts(tmp_path):
+    # shape reads, None checks, and plain Python functions are all legal
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x, mask=None):
+            if x.shape[0] > 4:
+                x = x[:4]
+            if mask is not None:
+                x = x * mask
+            return x
+
+        def not_jitted(x):
+            if x > 0:
+                return x
+            return -x
+    """}, select=["JL1"])
+    assert findings == []
+
+
+def test_jl101_configured_static_attribute(tmp_path):
+    src = {"fx/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(g, x):
+            if g.n_nodes > 100:
+                return x
+            return -x
+    """}
+    assert only(sweep(tmp_path, dict(src), select=["JL1"]), "JL101")
+    assert sweep(tmp_path / "b", dict(src), select=["JL1"],
+                 static_attributes=["n_nodes"]) == []
+
+
+def test_jl101_while_loop_body_is_a_traced_root(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+
+        def run(x):
+            def body(s):
+                while s > 0:
+                    s = s - 1
+                return s
+            return jax.lax.while_loop(lambda s: s < 9, body, x)
+    """}, select=["JL1"])
+    (f,) = only(findings, "JL101")
+    assert f.line == 5
+
+
+def test_jl102_assert_on_traced(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            assert x > 0
+            return x
+    """}, select=["JL1"])
+    (f,) = only(findings, "JL102")
+    assert (f.path, f.line) == ("src/fx/mod.py", 5)
+
+
+def test_jl103_concretization(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            n = int(x[0])
+            return x[:1] * n
+    """}, select=["JL1"])
+    (f,) = only(findings, "JL103")
+    assert f.line == 5
+
+
+def test_jl104_numpy_on_traced(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x).sum()
+    """}, select=["JL1"])
+    (f,) = only(findings, "JL104")
+    assert f.line == 6
+
+
+def test_jl104_negative_numpy_on_concrete_closure(tmp_path):
+    # np.* on values that never carry taint (module constants, untraced
+    # args) is ordinary host-side code
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import numpy as np
+
+        TABLE = np.arange(16)
+
+        def host_prep(ids):
+            return np.asarray(ids, dtype=np.int32)
+    """}, select=["JL1"])
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# JL2 — backend contract
+# ---------------------------------------------------------------------------
+
+def test_jl201_factory_arity(tmp_path):
+    findings = sweep(tmp_path, {"fx/backends.py": """\
+        from fx.registry import register_backend
+
+        @register_backend("twoarg")
+        def make(cfg, extra):
+            def dist_fn(graph, active_ids, nbr_ids, queries):
+                '''(B, M, R) batch-major.'''
+                return nbr_ids
+            return dist_fn
+    """}, select=["JL2"])
+    (f,) = only(findings, "JL201")
+    assert (f.path, f.line) == ("src/fx/backends.py", 3)
+
+
+def test_jl202_distfn_signature(tmp_path):
+    findings = sweep(tmp_path, {"fx/backends.py": """\
+        from fx.registry import register_backend
+
+        @register_backend("perquery")
+        def make(cfg):
+            def dist_fn(graph, node_id, query):
+                return node_id
+            return dist_fn
+    """}, select=["JL2"])
+    (f,) = only(findings, "JL202")
+    assert f.line == 3
+    assert "3 positional parameter(s)" in f.message
+
+
+def test_jl202_negative_through_maker_chain(tmp_path):
+    # factory delegates to a maker in another module; terminal is legal
+    findings = sweep(tmp_path, {
+        "fx/makers.py": """\
+            def make_l2(metric):
+                '''Batch-major (B, M, R) distances.'''
+                def dist_fn(graph, active_ids, nbr_ids, queries):
+                    return nbr_ids
+                return dist_fn
+        """,
+        "fx/backends.py": """\
+            from fx.registry import register_backend
+            from fx.makers import make_l2
+
+            @register_backend("l2")
+            def make(cfg):
+                return make_l2("l2")
+        """,
+    }, select=["JL2"])
+    assert findings == []
+
+
+def test_jl203_manual_sentinel_padding(tmp_path):
+    findings = sweep(tmp_path, {"fx/pad.py": """\
+        import jax.numpy as jnp
+
+        def hand_pad(ids, tile, g):
+            pad = tile - ids.shape[0]
+            return jnp.concatenate([ids, jnp.full((pad,), g.n_nodes)])
+
+        def pad_ids_to_tile(ids, tile, g):
+            pad = tile - ids.shape[0]
+            return jnp.concatenate([ids, jnp.full((pad,), g.n_nodes)])
+    """}, select=["JL2"])
+    hits = only(findings, "JL203")
+    # the audited helper itself is exempt; only hand_pad is flagged
+    assert [f.line for f in hits] == [5]
+
+
+def test_jl204_quant_suffix_mismatch_both_directions(tmp_path):
+    findings = sweep(tmp_path, {"fx/backends.py": """\
+        from fx.registry import register_backend
+        from fx.quant import require_codes
+
+        @register_backend("fast_int8")
+        def make_noint8(cfg):
+            def dist_fn(graph, active_ids, nbr_ids, queries):
+                '''(B, M, R) batch-major.'''
+                return nbr_ids
+            return dist_fn
+
+        @register_backend("plain")
+        def make_hidden_quant(cfg):
+            def dist_fn(graph, active_ids, nbr_ids, queries):
+                '''(B, M, R) batch-major.'''
+                require_codes(graph, "int8")
+                return nbr_ids
+            return dist_fn
+
+        @register_backend("good_int8")
+        def make_good(cfg):
+            def dist_fn(graph, active_ids, nbr_ids, queries):
+                '''(B, M, R) batch-major.'''
+                require_codes(graph, "int8")
+                return nbr_ids
+            return dist_fn
+    """}, select=["JL2"])
+    hits = only(findings, "JL204")
+    assert [f.line for f in hits] == [4, 11]
+
+
+# ---------------------------------------------------------------------------
+# JL3 — recompile hygiene
+# ---------------------------------------------------------------------------
+
+def test_jl301_unhashable_static_annotation(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        from functools import partial
+        import jax
+
+        @partial(jax.jit, static_argnames="opts")
+        def f(x, opts: dict):
+            return x
+    """}, select=["JL3"])
+    (f,) = only(findings, "JL301")
+    assert (f.path, f.line) == ("src/fx/mod.py", 4)
+
+
+def test_jl302_nonfrozen_dataclass_static(tmp_path):
+    src = """\
+        import dataclasses
+        from functools import partial
+        import jax
+
+        @dataclasses.dataclass{frozen}
+        class Cfg:
+            k: int = 8
+
+        @partial(jax.jit, static_argnames="cfg")
+        def f(x, cfg: Cfg):
+            return x
+    """
+    findings = sweep(tmp_path, {
+        "fx/mod.py": textwrap.dedent(src).format(frozen="")},
+        select=["JL3"])
+    (f,) = only(findings, "JL302")
+    assert f.line == 9
+    clean = sweep(tmp_path / "b", {
+        "fx/mod.py": textwrap.dedent(src).format(frozen="(frozen=True)")},
+        select=["JL3"])
+    assert clean == []
+
+
+def test_jl303_jit_inside_loop(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+
+        def f(x):
+            return x
+
+        g = jax.jit(f)
+
+        def retrace(xs):
+            out = []
+            for x in xs:
+                out.append(jax.jit(f)(x))
+            return out
+    """}, select=["JL3"])
+    (f,) = only(findings, "JL303")
+    assert f.line == 11
+
+
+# ---------------------------------------------------------------------------
+# JL4 — shape convention
+# ---------------------------------------------------------------------------
+
+def test_jl401_batch_function_needs_doc(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        def score_batch(x):
+            return x * 2
+
+        def rank_batch(x):
+            '''Ranks (B, n) scores along the trailing axis.'''
+            return x
+    """}, select=["JL4"])
+    (f,) = only(findings, "JL401")
+    assert f.line == 1
+    assert "score_batch" in f.message
+
+
+def test_jl401_backend_chain_doc(tmp_path):
+    findings = sweep(tmp_path, {"fx/backends.py": """\
+        from fx.registry import register_backend
+
+        @register_backend("undoc")
+        def make(cfg):
+            def dist_fn(graph, active_ids, nbr_ids, queries):
+                return nbr_ids
+            return dist_fn
+    """}, select=["JL4"])
+    (f,) = only(findings, "JL401")
+    assert f.line == 3
+
+
+def test_jl402_flatten_in_core_batch_function(tmp_path):
+    src = """\
+        def fuse_batch(x):
+            '''Sums (B, n) rows.'''
+            return x.reshape(-1).sum()
+
+        def keep_batch(x):
+            '''Sums (B, n) rows per query.'''
+            return x.reshape(x.shape[0], -1).sum(axis=-1)
+    """
+    findings = sweep(tmp_path, {"fx/core/engine.py": src}, select=["JL4"])
+    (f,) = only(findings, "JL402")
+    assert (f.path, f.line) == ("src/fx/core/engine.py", 3)
+    # the same flatten outside core/ is not JL402's business
+    assert sweep(tmp_path / "b", {"fx/serve/engine.py": src},
+                 select=["JL4"]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_with_justification(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        def score_batch(x):  # jaxlint: ignore[JL401] -- shapes in caller doc
+            return x * 2
+    """}, select=["JL4"])
+    (f,) = only(findings, "JL401")
+    assert f.suppressed
+    assert f.justification == "shapes in caller doc"
+
+
+def test_standalone_comment_suppresses_next_code_line(tmp_path):
+    findings = sweep(tmp_path, {"fx/core/mod.py": """\
+        def fuse_batch(x):
+            '''Sums (B, n) rows.'''
+            # jaxlint: ignore[JL402] -- cross-lane sum is intended
+            return x.reshape(-1).sum()
+    """}, select=["JL4"])
+    (f,) = only(findings, "JL402")
+    assert f.suppressed
+    assert f.justification == "cross-lane sum is intended"
+
+
+def test_family_suppression_covers_member_rules(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        def score_batch(x):  # jaxlint: ignore[JL4]
+            return x * 2
+    """}, select=["JL4"])
+    (f,) = only(findings, "JL401")
+    assert f.suppressed
+
+
+def test_suppression_does_not_cover_other_rules(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        def score_batch(x):  # jaxlint: ignore[JL402]
+            return x * 2
+    """}, select=["JL4"])
+    (f,) = only(findings, "JL401")
+    assert not f.suppressed
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _write_cli_tree(tmp_path):
+    p = tmp_path / "src" / "fx" / "mod.py"
+    p.parent.mkdir(parents=True)
+    p.write_text(textwrap.dedent("""\
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+
+        def score_batch(x):  # jaxlint: ignore[JL401] -- doc lives in caller
+            return x * 2
+    """))
+
+
+def test_cli_json_schema_and_exit_code(tmp_path, monkeypatch, capsys):
+    _write_cli_tree(tmp_path)
+    monkeypatch.chdir(tmp_path)
+    rc = cli.run(["src", "--no-config", "--format", "json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert set(out) == {"version", "findings", "suppressed", "errors",
+                        "counts"}
+    assert out["counts"] == {"active": 1, "suppressed": 1, "files": 1}
+    (f,) = out["findings"]
+    assert {"rule", "family", "path", "line", "col", "message",
+            "suppressed"} <= set(f)
+    assert (f["rule"], f["family"], f["line"]) == ("JL101", "JL1", 5)
+    (s,) = out["suppressed"]
+    assert s["rule"] == "JL401" and s["justification"]
+
+
+def test_cli_select_and_exit_zero(tmp_path, monkeypatch, capsys):
+    _write_cli_tree(tmp_path)
+    monkeypatch.chdir(tmp_path)
+    # JL4's only finding is suppressed -> clean run under --select JL4
+    assert cli.run(["src", "--no-config", "--select", "JL4"]) == 0
+    capsys.readouterr()
+    # --exit-zero downgrades the JL101 failure to report-only
+    assert cli.run(["src", "--no-config", "--exit-zero"]) == 0
+    assert "JL101" in capsys.readouterr().out
+
+
+def test_cli_text_format_renders_location(tmp_path, monkeypatch, capsys):
+    _write_cli_tree(tmp_path)
+    monkeypatch.chdir(tmp_path)
+    rc = cli.run(["src", "--no-config", "--select", "JL1"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "src/fx/mod.py:5:" in out and "JL101" in out
+
+
+def test_cli_unknown_selector_is_usage_error(tmp_path, monkeypatch, capsys):
+    _write_cli_tree(tmp_path)
+    monkeypatch.chdir(tmp_path)
+    assert cli.run(["src", "--no-config", "--select", "JL9"]) == 2
+
+
+def test_cli_syntax_error_reported_not_fatal(tmp_path, monkeypatch, capsys):
+    p = tmp_path / "src" / "bad.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("def broken(:\n")
+    monkeypatch.chdir(tmp_path)
+    rc = cli.run(["src", "--no-config", "--format", "json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 2
+    assert out["errors"] and "syntax error" in out["errors"][0]
+
+
+def test_cli_list_rules(capsys):
+    assert cli.run(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("JL101", "JL204", "JL303", "JL402"):
+        assert rid in out
+
+
+# ---------------------------------------------------------------------------
+# the real tree stays clean (the CI gate, runnable locally)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not (ROOT / "src" / "repro").is_dir(),
+                    reason="repo tree not present")
+def test_repo_tree_has_no_active_findings(monkeypatch, capsys):
+    monkeypatch.chdir(ROOT)
+    rc = cli.run(["src/repro", "--format", "json"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0, out["findings"]
+    assert out["counts"]["active"] == 0
+    assert out["counts"]["files"] > 30
+    # every surviving suppression carries a written justification
+    assert all(s["justification"].strip() for s in out["suppressed"])

@@ -1,0 +1,29 @@
+"""jaxlint — repo-specific static analysis for the Speed-ANN codebase.
+
+Four rule families guard the invariants the dynamic test suite can't see
+until runtime (see docs/static-analysis.md):
+
+* **JL1 tracer purity** — Python control flow / concretization on values
+  that are traced under ``jax.jit``, ``lax.while_loop``/``scan``/``cond``
+  bodies, or ``pallas_call`` kernels (found by a call-graph walk from those
+  entry points).
+* **JL2 backend contract** — ``@register_backend`` factories must produce
+  the batched ``DistFn(graph, ids (B,M), nbrs (B,M,R), queries (B,d))``
+  signature, route sentinel id padding through ``pad_ids_to_tile``, and
+  declare their quant dtype consistently with the ``_int8``/``_bf16`` name
+  suffix the facade validates against.
+* **JL3 recompile hygiene** — jit static arguments that are unhashable
+  (dict/list/set-typed, non-frozen dataclasses) and jit wrappers created
+  inside Python loops (a fresh callable per iteration defeats the trace
+  cache).
+* **JL4 shape convention** — batch-major functions (``*_batch`` /
+  ``batch_*`` / registered backends) must document the leading-B axis, and
+  ``.reshape(-1)`` full flattens inside them are flagged as batch-axis
+  drops.
+
+Run ``python -m tools.jaxlint src/repro`` from the repo root.  Findings are
+suppressed per line with ``# jaxlint: ignore[RULE] -- justification``.
+"""
+from tools.jaxlint.model import Finding, Rule, all_rules  # noqa: F401
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from tools.jaxlint.cli import main
+
+main()

@@ -1,0 +1,113 @@
+"""Discovery of ``@register_backend`` factories and their DistFn chains.
+
+Shared between JL2 (contract checks) and JL1 (a registered DistFn's body is
+a traced root even though search code reaches it through indirection, so the
+call-graph walk seeds from here too).
+
+A factory may return its DistFn directly (a nested ``def dist_fn``), or
+delegate to a maker (``return make_int8_dist_fn(metric)``) which returns the
+nested def — the resolver follows that chain through project modules up to a
+small depth and records every terminal function it can prove.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import List, Optional
+
+from tools.jaxlint.project import FnRef, Module, Project
+
+_MAX_CHAIN_DEPTH = 4
+
+
+@dataclasses.dataclass
+class BackendReg:
+    name: str                      # the registered backend name string
+    module: Module
+    factory: ast.FunctionDef
+    line: int                      # line of the @register_backend decorator
+    chain: List[FnRef]             # factory plus any makers it delegates to
+    terminals: List[FnRef]         # resolvable DistFn defs/lambdas
+
+
+def _register_decorator_name(dec: ast.expr) -> Optional[str]:
+    """The backend name string if ``dec`` is ``register_backend("x")``."""
+    if not isinstance(dec, ast.Call):
+        return None
+    target = dec.func
+    name = target.attr if isinstance(target, ast.Attribute) \
+        else getattr(target, "id", "")
+    if name != "register_backend":
+        return None
+    if dec.args and isinstance(dec.args[0], ast.Constant) \
+            and isinstance(dec.args[0].value, str):
+        return dec.args[0].value
+    return ""   # registered, name not statically known
+
+
+def _returns(node: ast.AST) -> List[ast.Return]:
+    """Return statements belonging to ``node`` itself (not nested defs)."""
+    out: List[ast.Return] = []
+    stack = list(getattr(node, "body", []))
+    while stack:
+        stmt = stack.pop()
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda, ast.ClassDef)):
+            continue
+        if isinstance(stmt, ast.Return) and stmt.value is not None:
+            out.append(stmt)
+        stack.extend(ast.iter_child_nodes(stmt))
+    return out
+
+
+def _scope_chain(mod: Module, node: ast.AST) -> List[ast.AST]:
+    chain: List[ast.AST] = [node]
+    cur = mod.parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            chain.insert(0, cur)
+        cur = mod.parent(cur)
+    return chain
+
+
+def _resolve_terminals(project: Project, fn: FnRef, chain: List[FnRef],
+                       terminals: List[FnRef], depth: int) -> None:
+    if depth > _MAX_CHAIN_DEPTH:
+        return
+    mod, node = fn.module, fn.node
+    scope = _scope_chain(mod, node)
+    for ret in _returns(node):
+        val = ret.value
+        if isinstance(val, ast.Lambda):
+            terminals.append(FnRef(mod, val))
+        elif isinstance(val, ast.Name):
+            local = project.resolve_call(mod, scope, val)
+            if local is not None:
+                terminals.append(local)
+        elif isinstance(val, ast.Call):
+            maker = project.resolve_call(mod, scope, val.func)
+            if maker is not None and all(m.node is not maker.node
+                                         for m in chain):
+                chain.append(maker)
+                _resolve_terminals(project, maker, chain, terminals,
+                                   depth + 1)
+
+
+def find_registered_backends(project: Project) -> List[BackendReg]:
+    regs: List[BackendReg] = []
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                name = _register_decorator_name(dec)
+                if name is None:
+                    continue
+                factory = FnRef(mod, node)
+                chain = [factory]
+                terminals: List[FnRef] = []
+                _resolve_terminals(project, factory, chain, terminals, 0)
+                regs.append(BackendReg(
+                    name=name, module=mod, factory=node,
+                    line=dec.lineno, chain=chain, terminals=terminals))
+    return regs

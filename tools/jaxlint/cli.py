@@ -1,0 +1,130 @@
+"""jaxlint command line.
+
+    python -m tools.jaxlint src/repro [--select JL1,JL2] [--format json]
+
+Exit status: 0 when no unsuppressed finding (or ``--exit-zero``), 1 when
+unsuppressed findings remain, 2 on usage/parse errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List
+
+from tools.jaxlint import __version__
+from tools.jaxlint.config import load_config
+from tools.jaxlint.model import (RULE_DESCRIPTIONS, Finding, all_rules,
+                                 selected_rules)
+from tools.jaxlint.project import Project
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.jaxlint",
+        description="repo-specific static analysis: tracer purity (JL1), "
+                    "backend contracts (JL2), recompile hygiene (JL3), "
+                    "shape conventions (JL4)")
+    p.add_argument("paths", nargs="*", default=["src/repro"],
+                   help="files/directories to sweep (default: src/repro)")
+    p.add_argument("--select", default=None,
+                   help="comma-separated families or rule ids "
+                        "(e.g. JL1,JL402); default: all")
+    p.add_argument("--ignore", default=None,
+                   help="comma-separated families or rule ids to drop")
+    p.add_argument("--format", choices=("text", "json"), default="text")
+    p.add_argument("--config", default="pyproject.toml",
+                   help="pyproject.toml carrying [tool.jaxlint] "
+                        "(default: ./pyproject.toml)")
+    p.add_argument("--no-config", action="store_true",
+                   help="ignore [tool.jaxlint] (no excludes, no defaults)")
+    p.add_argument("--show-suppressed", action="store_true",
+                   help="also print suppressed findings (text format)")
+    p.add_argument("--exit-zero", action="store_true",
+                   help="always exit 0 (report-only mode)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    p.add_argument("--version", action="version",
+                   version=f"jaxlint {__version__}")
+    return p
+
+
+def _match(finding: Finding, selectors: List[str]) -> bool:
+    return any(finding.rule == s or finding.rule.startswith(s)
+               for s in selectors)
+
+
+def run(argv: List[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.family}  {rule.name}: {rule.doc}")
+        for rid in sorted(RULE_DESCRIPTIONS):
+            print(f"  {rid}  {RULE_DESCRIPTIONS[rid]}")
+        return 0
+
+    cfg = load_config(None if args.no_config else Path(args.config))
+    select = [s.strip().upper() for s in args.select.split(",")] \
+        if args.select else (cfg.select or None)
+    ignore = [s.strip().upper() for s in args.ignore.split(",")] \
+        if args.ignore else []
+
+    project = Project(cfg, root=Path.cwd())
+    errors = project.add_paths([Path(p) for p in args.paths])
+    if not project.modules and not errors:
+        print("jaxlint: no Python files matched", file=sys.stderr)
+        return 2
+
+    try:
+        rules = selected_rules(select)
+    except ValueError as e:
+        print(f"jaxlint: {e}", file=sys.stderr)
+        return 2
+
+    findings: List[Finding] = []
+    for rule in rules:
+        findings.extend(rule.check(project))
+    if select:
+        findings = [f for f in findings if _match(f, select)]
+    if ignore:
+        findings = [f for f in findings if not _match(f, ignore)]
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+
+    active = [f for f in findings if not f.suppressed]
+    suppressed = [f for f in findings if f.suppressed]
+
+    if args.format == "json":
+        print(json.dumps({
+            "version": __version__,
+            "findings": [f.to_json() for f in active],
+            "suppressed": [f.to_json() for f in suppressed],
+            "errors": errors,
+            "counts": {
+                "active": len(active),
+                "suppressed": len(suppressed),
+                "files": len(project.modules),
+            },
+        }, indent=2))
+    else:
+        for err in errors:
+            print(f"error: {err}")
+        for f in active:
+            print(f.render())
+        if args.show_suppressed:
+            for f in suppressed:
+                print(f.render())
+        tail = (f"{len(active)} finding(s), {len(suppressed)} suppressed, "
+                f"{len(project.modules)} file(s) swept")
+        print(("ok: " if not active and not errors else "") + tail)
+
+    if errors:
+        return 2
+    if active and not args.exit_zero:
+        return 1
+    return 0
+
+
+def main() -> None:  # pragma: no cover - exercised via __main__
+    sys.exit(run())

@@ -1,0 +1,99 @@
+"""Configuration loading for jaxlint (``[tool.jaxlint]`` in pyproject.toml).
+
+Recognized keys::
+
+    [tool.jaxlint]
+    exclude = ["src/repro/models/**", ...]   # fnmatch globs, repo-relative
+    select = ["JL1", "JL2"]                  # default rule selection
+    static-attributes = ["n_nodes", ...]     # attrs that stay static under
+                                             # jit (shape-derived properties)
+
+The container pins Python 3.10 (no ``tomllib``) and vendoring a TOML
+library is out of scope, so a minimal reader for the subset jaxlint needs
+(one table of string / bool / string-list values) backs up the stdlib
+parser when it is unavailable.
+"""
+from __future__ import annotations
+
+import ast as _ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import List, Optional
+
+# shape-derived metadata that stays a static Python value under tracing
+BUILTIN_STATIC_ATTRS = ("shape", "ndim", "dtype", "size")
+
+
+@dataclasses.dataclass
+class Config:
+    exclude: List[str] = dataclasses.field(default_factory=list)
+    select: List[str] = dataclasses.field(default_factory=list)
+    static_attributes: List[str] = dataclasses.field(default_factory=list)
+
+    def all_static_attributes(self) -> frozenset:
+        return frozenset(BUILTIN_STATIC_ATTRS) | set(self.static_attributes)
+
+
+def _parse_toml_table(text: str, table: str) -> dict:
+    """Tiny fallback parser: the ``[table]`` section of a TOML document,
+    values restricted to strings, booleans, and (possibly multi-line)
+    string lists — the subset ``[tool.jaxlint]`` uses."""
+    lines = text.splitlines()
+    out: dict = {}
+    in_table = False
+    buf = ""
+    key = None
+    for raw in lines:
+        line = raw.strip()
+        if key is None:
+            if line.startswith("["):
+                in_table = line == f"[{table}]"
+                continue
+            if not in_table or not line or line.startswith("#"):
+                continue
+            m = re.match(r"^([A-Za-z0-9_.\-]+)\s*=\s*(.*)$", line)
+            if not m:
+                continue
+            key, buf = m.group(1), m.group(2)
+        else:
+            buf += " " + line
+        # a value is complete when brackets balance (or it isn't a list)
+        if buf.lstrip().startswith("[") and buf.count("[") > buf.count("]"):
+            continue
+        out[key] = _parse_toml_value(buf.strip())
+        key, buf = None, ""
+    return out
+
+
+def _parse_toml_value(text: str):
+    text = text.split("#", 1)[0].strip() if not text.startswith(
+        ("'", '"', "[")) else text
+    if text in ("true", "false"):
+        return text == "true"
+    try:
+        # TOML strings/lists-of-strings are a Python-literal subset once
+        # trailing commas are tolerated (ast handles those natively)
+        return _ast.literal_eval(text)
+    except (ValueError, SyntaxError):
+        return text
+
+
+def load_config(pyproject: Optional[Path]) -> Config:
+    """Read ``[tool.jaxlint]``; a missing file or section yields defaults."""
+    cfg = Config()
+    if pyproject is None or not pyproject.is_file():
+        return cfg
+    text = pyproject.read_text()
+    table: dict = {}
+    try:
+        import tomllib  # Python >= 3.11
+        table = tomllib.loads(text).get("tool", {}).get("jaxlint", {})
+    except ModuleNotFoundError:
+        table = _parse_toml_table(text, "tool.jaxlint")
+    cfg.exclude = [str(x) for x in table.get("exclude", [])]
+    cfg.select = [str(x) for x in table.get("select", [])]
+    cfg.static_attributes = [
+        str(x) for x in table.get("static-attributes",
+                                  table.get("static_attributes", []))]
+    return cfg

@@ -1,0 +1,113 @@
+"""Finding/rule data model and the pluggable rule registry.
+
+A *rule* is a callable ``check(project) -> Iterable[Finding]`` registered
+under a family id (``JL1`` .. ``JL4``).  The CLI selects families (or full
+rule ids) with ``--select`` and renders the findings; per-line
+``# jaxlint: ignore[...]`` comments mark findings as suppressed (they are
+still reported with ``--show-suppressed`` but never fail the run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterable, List
+
+# rule id -> one-line description, kept in sync with docs/static-analysis.md
+RULE_DESCRIPTIONS: Dict[str, str] = {
+    "JL101": "data-dependent Python `if`/`while` on a traced value",
+    "JL102": "`assert` on a traced value",
+    "JL103": "concretization of a traced value (int/float/bool/.item/.tolist)",
+    "JL104": "numpy call on a traced value (forces host transfer)",
+    "JL201": "@register_backend factory must take exactly one argument",
+    "JL202": "registered DistFn breaks the batched (graph, ids, nbrs, "
+             "queries) contract",
+    "JL203": "manual sentinel id padding; route through pad_ids_to_tile",
+    "JL204": "backend name suffix / require_codes quant dtype mismatch",
+    "JL301": "jit static argument is dict/list/set-typed (unhashable)",
+    "JL302": "jit static argument is a non-frozen dataclass",
+    "JL303": "jax.jit created inside a loop (retraces every iteration)",
+    "JL401": "batch-major function missing leading-B axis documentation",
+    "JL402": "full flatten (.reshape(-1)) inside a batch-major core function",
+}
+
+FAMILIES = ("JL1", "JL2", "JL3", "JL4")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic, pinned to a source location."""
+    rule: str            # full id, e.g. "JL101"
+    path: str            # repo-relative posix path
+    line: int            # 1-based
+    col: int             # 0-based, ast convention
+    message: str
+    suppressed: bool = False
+    justification: str = ""  # text after `--` in the suppression comment
+
+    @property
+    def family(self) -> str:
+        return self.rule[:3]
+
+    def to_json(self) -> dict:
+        d = {
+            "rule": self.rule,
+            "family": self.family,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "suppressed": self.suppressed,
+        }
+        if self.suppressed:
+            d["justification"] = self.justification
+        return d
+
+    def render(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule} {self.message}{tag}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered rule family checker."""
+    family: str
+    name: str
+    check: Callable  # check(project) -> Iterable[Finding]
+    doc: str
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register_rule(family: str, name: str, doc: str = ""):
+    """Decorator: register ``check(project)`` under a family id.
+
+    New rule families plug in here — see docs/static-analysis.md ("adding a
+    new rule")."""
+    def deco(fn):
+        _RULES[family] = Rule(family=family, name=name, check=fn,
+                              doc=doc or (fn.__doc__ or "").strip())
+        return fn
+    return deco
+
+
+def all_rules() -> List[Rule]:
+    # import for the registration side effect; rule modules register on load
+    from tools.jaxlint.rules import jl1, jl2, jl3, jl4  # noqa: F401
+    return [_RULES[f] for f in sorted(_RULES)]
+
+
+def selected_rules(select: Iterable[str] | None) -> List[Rule]:
+    """``--select`` values (families like JL1 or full ids like JL402) ->
+    the rule-family checkers to run.  Full ids select their family; the CLI
+    filters findings back down to the requested ids afterwards."""
+    rules = all_rules()
+    if not select:
+        return rules
+    fams = {s[:3] for s in select}
+    unknown = fams - {r.family for r in rules}
+    if unknown:
+        raise ValueError(
+            f"unknown rule selector(s) {sorted(unknown)}; "
+            f"families: {[r.family for r in rules]}")
+    return [r for r in rules if r.family in fams]

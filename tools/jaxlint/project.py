@@ -1,0 +1,305 @@
+"""Project model: parsed modules, symbol tables, and call resolution.
+
+jaxlint analyzes the *project*, not single files: JL1's call-graph walk and
+JL2's maker-chain resolution both cross module boundaries, so every swept
+file is parsed up front into a :class:`Module` (AST + parent links + import
+table + function index) and calls are resolved through a project-wide
+``(module name, function name)`` index.
+
+Resolution is deliberately name-based and conservative: a call that cannot
+be resolved to a project function is simply not followed (external library,
+dynamic dispatch) — jaxlint only reports what it can prove from the source.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from tools.jaxlint.config import Config
+
+SUPPRESS_RE = re.compile(
+    r"#\s*jaxlint:\s*ignore\[([A-Za-z0-9,\s]+)\]\s*(?:--\s*(.*?))?\s*$")
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    rules: Tuple[str, ...]   # families ("JL1") or full ids ("JL101")
+    justification: str
+
+    def covers(self, rule: str) -> bool:
+        return any(rule == r or rule.startswith(r) for r in self.rules)
+
+
+@dataclasses.dataclass
+class Module:
+    path: Path                       # absolute
+    relpath: str                     # repo-relative posix path
+    modname: str                     # dotted import name, e.g. repro.core.bfis
+    tree: ast.Module
+    lines: List[str]
+    parents: Dict[int, ast.AST] = dataclasses.field(default_factory=dict)
+    # local name -> fully qualified module ("import x.y as z")
+    import_aliases: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # local name -> (module, original name)  ("from x import f as g")
+    import_names: Dict[str, Tuple[str, str]] = dataclasses.field(
+        default_factory=dict)
+    functions: Dict[str, ast.FunctionDef] = dataclasses.field(
+        default_factory=dict)   # top-level defs only
+    suppressions: Dict[int, Suppression] = dataclasses.field(
+        default_factory=dict)
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self.parents.get(id(node))
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return cur
+            cur = self.parent(cur)
+        return None
+
+
+@dataclasses.dataclass
+class FnRef:
+    """A resolved project function: its def node plus the module it lives
+    in (needed to keep walking calls from inside it)."""
+    module: Module
+    node: ast.AST  # FunctionDef | AsyncFunctionDef | Lambda
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+
+def _modname_for(path: Path, roots: Tuple[str, ...] = ("src",)) -> str:
+    """Dotted module name; paths under a ``src`` root import from it."""
+    parts = list(path.with_suffix("").parts)
+    for root in roots:
+        if root in parts:
+            parts = parts[len(parts) - parts[::-1].index(root):]
+            break
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    # fall back to the last two components for files outside any root
+    return ".".join(parts[-4:]) if parts else path.stem
+
+
+class Project:
+    """All swept modules plus the cross-module lookup tables rules use."""
+
+    def __init__(self, config: Config, root: Path):
+        self.config = config
+        self.root = root
+        self.modules: List[Module] = []
+        self._by_modname: Dict[str, Module] = {}
+        # (modname, class name) -> frozen? for every @dataclass in the sweep
+        self.dataclasses: Dict[Tuple[str, str], bool] = {}
+        # configured static attributes plus every dataclass field declared
+        # static=True in register_dataclass metadata (aux data, not leaves)
+        self.static_attrs = set(config.all_static_attributes())
+
+    # -- construction -----------------------------------------------------
+
+    def add_paths(self, paths: Iterable[Path]) -> List[str]:
+        """Collect ``*.py`` under ``paths`` minus the config excludes.
+        Returns parse-error strings (syntax errors are reported, not
+        fatal)."""
+        errors: List[str] = []
+        files: List[Path] = []
+        for p in paths:
+            if p.is_dir():
+                files.extend(sorted(p.rglob("*.py")))
+            elif p.suffix == ".py":
+                files.append(p)
+        for f in files:
+            rel = self._rel(f)
+            if any(fnmatch.fnmatch(rel, pat) for pat in self.config.exclude):
+                continue
+            try:
+                self._add_file(f, rel)
+            except SyntaxError as e:
+                errors.append(f"{rel}:{e.lineno}: syntax error: {e.msg}")
+        return errors
+
+    def _rel(self, path: Path) -> str:
+        try:
+            return path.resolve().relative_to(self.root.resolve()).as_posix()
+        except ValueError:
+            return path.as_posix()
+
+    def _add_file(self, path: Path, rel: str) -> None:
+        text = path.read_text()
+        tree = ast.parse(text, filename=rel)
+        mod = Module(path=path, relpath=rel, modname=_modname_for(path),
+                     tree=tree, lines=text.splitlines())
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                mod.parents[id(child)] = parent
+        self._index_imports(mod)
+        self._index_defs(mod)
+        self._scan_suppressions(mod)
+        self.modules.append(mod)
+        self._by_modname[mod.modname] = mod
+
+    def _index_imports(self, mod: Module) -> None:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mod.import_aliases[a.asname or a.name.split(".")[0]] = \
+                        a.name if a.asname else a.name.split(".")[0]
+                    if a.asname:
+                        mod.import_aliases[a.asname] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    mod.import_names[a.asname or a.name] = (node.module,
+                                                            a.name)
+
+    def _index_defs(self, mod: Module) -> None:
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                mod.functions[node.name] = node
+            elif isinstance(node, ast.ClassDef):
+                frozen = self._dataclass_frozen(node)
+                if frozen is not None:
+                    self.dataclasses[(mod.modname, node.name)] = frozen
+                    self.static_attrs |= self._static_fields(node)
+
+    @staticmethod
+    def _dataclass_frozen(node: ast.ClassDef) -> Optional[bool]:
+        """None if not a dataclass; else whether it is frozen=True."""
+        for dec in node.decorator_list:
+            target, kwargs = dec, []
+            if isinstance(dec, ast.Call):
+                target, kwargs = dec.func, dec.keywords
+            name = target.attr if isinstance(target, ast.Attribute) \
+                else getattr(target, "id", "")
+            if name != "dataclass":
+                continue
+            for kw in kwargs:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    return bool(kw.value.value)
+            return False
+        return None
+
+    @staticmethod
+    def _static_fields(node: ast.ClassDef) -> set:
+        """Field names carrying ``metadata=dict(static=True)`` — the
+        ``jax.tree_util.register_dataclass`` convention for aux (non-leaf)
+        data, which stays a concrete Python value under tracing."""
+        out: set = set()
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and isinstance(stmt.value, ast.Call)):
+                continue
+            call = stmt.value
+            fname = dotted_name(call.func)
+            if fname.split(".")[-1] != "field":
+                continue
+            for kw in call.keywords:
+                if kw.arg != "metadata":
+                    continue
+                for sub in ast.walk(kw.value):
+                    if isinstance(sub, ast.keyword) and sub.arg == "static" \
+                            or (isinstance(sub, ast.Constant)
+                                and sub.value == "static"):
+                        out.add(stmt.target.id)
+        return out
+
+    def _scan_suppressions(self, mod: Module) -> None:
+        """Inline suppressions cover their own line; a standalone comment
+        suppression covers the next code line (comment continuations in
+        between are skipped)."""
+        for i, line in enumerate(mod.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rules = tuple(r.strip().upper()
+                          for r in m.group(1).split(",") if r.strip())
+            sup = Suppression(line=i, rules=rules,
+                              justification=m.group(2) or "")
+            mod.suppressions[i] = sup
+            if line.lstrip().startswith("#"):
+                j = i + 1
+                while j <= len(mod.lines) and (
+                        not mod.lines[j - 1].strip()
+                        or mod.lines[j - 1].lstrip().startswith("#")):
+                    j += 1
+                if j <= len(mod.lines) and j not in mod.suppressions:
+                    mod.suppressions[j] = sup
+
+    # -- lookup -----------------------------------------------------------
+
+    def module_named(self, modname: str) -> Optional[Module]:
+        return self._by_modname.get(modname)
+
+    def lookup(self, modname: str, funcname: str) -> Optional[FnRef]:
+        mod = self._by_modname.get(modname)
+        if mod and funcname in mod.functions:
+            return FnRef(mod, mod.functions[funcname])
+        return None
+
+    def resolve_call(self, mod: Module, scope: List[ast.AST],
+                     func: ast.expr) -> Optional[FnRef]:
+        """Resolve a call's function expression to a project function.
+
+        ``scope`` is the lexical chain of enclosing function defs (outermost
+        first); local nested defs shadow module-level names which shadow
+        imports — mirroring Python name resolution closely enough for the
+        direct-call style this codebase uses.
+        """
+        if isinstance(func, ast.Name):
+            for encl in reversed(scope):
+                body = getattr(encl, "body", [])
+                if not isinstance(body, list):
+                    continue
+                for stmt in body:
+                    if isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+                            and stmt.name == func.id:
+                        return FnRef(mod, stmt)
+            if func.id in mod.functions:
+                return FnRef(mod, mod.functions[func.id])
+            if func.id in mod.import_names:
+                target_mod, orig = mod.import_names[func.id]
+                return self.lookup(target_mod, orig)
+            return None
+        if isinstance(func, ast.Attribute) and isinstance(func.value,
+                                                          ast.Name):
+            alias = func.value.id
+            if alias in mod.import_aliases:
+                return self.lookup(mod.import_aliases[alias], func.attr)
+            if alias in mod.import_names:
+                # `from repro.core import queue as fq` imports a submodule;
+                # fq.insert_batch lives in repro.core.queue
+                base, orig = mod.import_names[alias]
+                return self.lookup(f"{base}.{orig}", func.attr)
+        return None
+
+    # -- suppression check ------------------------------------------------
+
+    def suppression_for(self, mod: Module, line: int,
+                        rule: str) -> Optional[Suppression]:
+        s = mod.suppressions.get(line)
+        if s and s.covers(rule):
+            return s
+        return None
+
+
+def dotted_name(node: ast.expr) -> str:
+    """'jax.lax.while_loop' for nested Attribute/Name chains, '' otherwise."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""

@@ -1,0 +1,2 @@
+"""Rule families. Importing a module registers its checker (see
+tools.jaxlint.model.register_rule)."""

@@ -1,0 +1,25 @@
+"""JL1 — tracer purity.
+
+The checks themselves (JL101–JL104) live in :mod:`tools.jaxlint.traced`;
+this module is the registry shim.  The engine walks the call graph from
+every jit / control-flow-primitive / pallas_call / registered-backend entry
+point, tracking which parameters and locals hold traced values, and flags
+Python-level uses that would concretize a tracer.
+
+Motivating bug class: ``if dists.min() < eps: ...`` inside a jitted search
+step either raises ``TracerBoolConversionError`` at first trace — or, worse,
+silently bakes in the branch taken during tracing when the value is a
+concrete closure constant on one call path and a tracer on another.
+"""
+from __future__ import annotations
+
+from tools.jaxlint.model import register_rule
+from tools.jaxlint.traced import TracedAnalysis
+
+
+@register_rule("JL1", "tracer-purity",
+               "Python control flow / concretization on traced values "
+               "reachable from jit, lax control-flow bodies, and "
+               "pallas_call kernels")
+def check_jl1(project):
+    return TracedAnalysis(project).run()

@@ -1,0 +1,173 @@
+"""JL2 — distance-backend contract checks.
+
+PR 5 fixed the ``DistFn`` contract as BATCH-MAJOR::
+
+    dist_fn(graph, active_ids (B, M), nbr_ids (B, M, R), queries (B, d))
+        -> (B, M, R) float32
+
+Every ``@register_backend`` factory must resolve to that signature (JL202)
+and take exactly the one ``cfg`` argument the registry calls it with
+(JL201).  Sentinel id padding must go through the one audited helper,
+``registry.pad_ids_to_tile`` (JL203) — hand-rolled ``jnp.concatenate`` +
+``jnp.full(..., n_nodes)`` pads have historically disagreed about which
+axis to pad and whether the sentinel is ``N`` or ``N+1``.  Quantized
+backends must keep their ``_int8``/``_bf16`` name suffix consistent with
+the ``require_codes(graph, dtype)`` check in their implementation (JL204):
+``required_quant_dtype`` in ``repro.quant.scheme`` derives the facade-side
+validation *from the name alone*, so a mismatch silently skips the
+build-time quant check and surfaces as a shape error deep inside jit.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from tools.jaxlint.backends import BackendReg, find_registered_backends
+from tools.jaxlint.model import Finding, register_rule
+from tools.jaxlint.project import FnRef, Module, Project, dotted_name
+
+_QUANT_SUFFIXES = ("int8", "bf16")
+
+
+def _finding(project: Project, mod: Module, node: ast.AST, rule: str,
+             message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    col = getattr(node, "col_offset", 0)
+    sup = project.suppression_for(mod, line, rule)
+    return Finding(rule=rule, path=mod.relpath, line=line, col=col,
+                   message=message, suppressed=sup is not None,
+                   justification=sup.justification if sup else "")
+
+
+def _positional_params(node: ast.AST) -> List[str]:
+    a = node.args
+    return [p.arg for p in getattr(a, "posonlyargs", []) + a.args]
+
+
+def _check_signature(reg: BackendReg, term: FnRef) -> Optional[str]:
+    """None if ``term`` matches the batched DistFn contract, else a
+    human-readable description of the mismatch."""
+    params = _positional_params(term.node)
+    if term.node.args.vararg is not None or len(params) != 4:
+        return (f"takes {len(params)} positional parameter(s) "
+                f"{params}; the batched contract is exactly "
+                f"(graph, ids, nbrs, queries)")
+    graph, ids, nbrs, queries = params
+    if graph != "graph":
+        return f"first parameter is '{graph}', expected 'graph'"
+    if queries != "queries":
+        return f"last parameter is '{queries}', expected 'queries'"
+    for p in (ids, nbrs):
+        if "id" not in p and "nbr" not in p:
+            return (f"parameter '{p}' does not look like a candidate-id "
+                    f"axis; expected names like 'active_ids'/'nbr_ids'")
+    return None
+
+
+def _calls_in_chain(reg: BackendReg) -> Iterable[ast.Call]:
+    seen: Set[int] = set()
+    for ref in reg.chain + reg.terminals:
+        if id(ref.node) in seen:
+            continue
+        seen.add(id(ref.node))
+        for node in ast.walk(ref.node):
+            if isinstance(node, ast.Call):
+                yield node
+
+
+def _require_codes_dtypes(reg: BackendReg) -> Set[str]:
+    """Dtype strings passed to require_codes() anywhere in the chain."""
+    out: Set[str] = set()
+    for call in _calls_in_chain(reg):
+        name = dotted_name(call.func)
+        if name.split(".")[-1] != "require_codes":
+            continue
+        if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+            out.add(str(call.args[1].value))
+    return out
+
+
+def _name_suffix_dtype(name: str) -> Optional[str]:
+    for d in _QUANT_SUFFIXES:
+        if name.endswith("_" + d):
+            return d
+    return None
+
+
+def _check_manual_padding(project: Project, mod: Module) -> List[Finding]:
+    """jnp.concatenate / jnp.pad building a sentinel pad by hand (a
+    jnp.full of an ``n_nodes``-ish sentinel) outside pad_ids_to_tile."""
+    out: List[Finding] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        if fname.split(".")[-1] not in ("concatenate", "pad"):
+            continue
+        encl = mod.enclosing_function(node)
+        if getattr(encl, "name", "") == "pad_ids_to_tile":
+            continue
+        has_full = any(
+            isinstance(c, ast.Call)
+            and dotted_name(c.func).split(".")[-1] == "full"
+            for c in ast.walk(node))
+        mentions_sentinel = any(
+            (isinstance(c, ast.Attribute) and c.attr == "n_nodes")
+            or (isinstance(c, ast.Name) and c.id == "n_nodes")
+            for c in ast.walk(node))
+        if has_full and mentions_sentinel:
+            out.append(_finding(
+                project, mod, node, "JL203",
+                "manual sentinel id padding (concatenate + full of "
+                "n_nodes); route through registry.pad_ids_to_tile so the "
+                "pad axis and sentinel value stay consistent"))
+    return out
+
+
+@register_rule("JL2", "backend-contract",
+               "@register_backend factories: batched DistFn signature, "
+               "pad_ids_to_tile routing, quant-dtype naming")
+def check_jl2(project: Project):
+    findings: List[Finding] = []
+    regs = find_registered_backends(project)
+    for reg in regs:
+        deco_node = reg.factory.decorator_list[0] \
+            if reg.factory.decorator_list else reg.factory
+        # JL201: the registry invokes factory(cfg)
+        params = _positional_params(reg.factory)
+        if len(params) != 1 or reg.factory.args.vararg is not None:
+            findings.append(_finding(
+                project, reg.module, deco_node, "JL201",
+                f"@register_backend({reg.name!r}) factory "
+                f"'{reg.factory.name}' takes {len(params)} parameter(s) "
+                f"{params}; the registry calls it as factory(cfg)"))
+        # JL202: the resolved DistFn(s) must match the batched contract
+        for term in reg.terminals:
+            mismatch = _check_signature(reg, term)
+            if mismatch:
+                findings.append(_finding(
+                    project, reg.module, deco_node, "JL202",
+                    f"backend {reg.name!r}: DistFn at "
+                    f"{term.module.relpath}:{term.node.lineno} {mismatch}"))
+        # JL204: quant-dtype suffix <-> require_codes consistency
+        suffix = _name_suffix_dtype(reg.name)
+        declared = _require_codes_dtypes(reg)
+        if suffix is not None and suffix not in declared:
+            findings.append(_finding(
+                project, reg.module, deco_node, "JL204",
+                f"backend {reg.name!r} is named as a {suffix} backend but "
+                f"its implementation never calls "
+                f"require_codes(graph, \"{suffix}\") "
+                f"(found: {sorted(declared) or 'none'})"))
+        elif suffix is None and declared:
+            findings.append(_finding(
+                project, reg.module, deco_node, "JL204",
+                f"backend {reg.name!r} requires quantized codes "
+                f"{sorted(declared)} but its name carries no _int8/_bf16 "
+                f"suffix — required_quant_dtype() derives the facade "
+                f"validation from the name, so the build-time check is "
+                f"silently skipped"))
+    # JL203: manual sentinel padding anywhere in the sweep
+    for mod in project.modules:
+        findings.extend(_check_manual_padding(project, mod))
+    return findings

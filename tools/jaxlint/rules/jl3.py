@@ -1,0 +1,180 @@
+"""JL3 — recompile hygiene.
+
+``jax.jit`` keys its trace cache on the *hash* of every static argument and
+on the identity of the wrapped callable.  Two repo-specific ways to lose:
+
+* **Unhashable / mutable statics (JL301, JL302).**  A static parameter
+  annotated ``dict``/``list``/``set`` raises ``TypeError: unhashable`` at
+  the first call; a *non-frozen* dataclass hashes by identity, so every
+  freshly constructed (but equal) config silently recompiles.  The repo's
+  convention is frozen dataclasses (``SearchConfig``, ``IndexSpec``, ...)
+  precisely so they are usable as cache keys — JL302 catches the drift.
+* **jit-under-loop (JL303).**  ``jax.jit(f)`` (or
+  ``functools.partial(jax.jit, ...)``) evaluated inside a ``for``/``while``
+  body creates a fresh wrapper per iteration; each wrapper owns its own
+  empty cache, so the loop retraces every pass.  Hoist the jit out of the
+  loop (or cache the wrapper keyed on its statics, as
+  ``AnnEngine._jit_cache`` does).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from tools.jaxlint.model import Finding, register_rule
+from tools.jaxlint.project import Module, Project, dotted_name
+from tools.jaxlint.traced import _jit_statics, is_jit_expr, jit_target_of
+
+_UNHASHABLE_ANNOTATIONS = {"dict", "list", "set", "Dict", "List", "Set",
+                           "MutableMapping", "defaultdict", "bytearray"}
+
+
+def _finding(project: Project, mod: Module, node: ast.AST, rule: str,
+             message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    sup = project.suppression_for(mod, line, rule)
+    return Finding(rule=rule, path=mod.relpath, line=line,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   suppressed=sup is not None,
+                   justification=sup.justification if sup else "")
+
+
+def _annotation_root(ann: Optional[ast.expr]) -> str:
+    """'Dict' for Dict[str, int], 'dict' for dict, '' when unannotated."""
+    if ann is None:
+        return ""
+    if isinstance(ann, ast.Subscript):
+        ann = ann.value
+    name = dotted_name(ann)
+    return name.split(".")[-1] if name else ""
+
+
+def _resolve_dataclass(project: Project, mod: Module,
+                       ann: Optional[ast.expr]) -> Optional[bool]:
+    """frozen? for an annotation naming a project dataclass, else None."""
+    root = _annotation_root(ann)
+    if not root:
+        return None
+    if root in mod.import_names:
+        target_mod, orig = mod.import_names[root]
+        return project.dataclasses.get((target_mod, orig))
+    return project.dataclasses.get((mod.modname, root))
+
+
+def _check_statics(project: Project, mod: Module, target: ast.AST,
+                   site: ast.AST, snames: Set[str],
+                   snums: Set[int]) -> List[Finding]:
+    out: List[Finding] = []
+    args = target.args
+    params = list(getattr(args, "posonlyargs", [])) + list(args.args) \
+        + list(args.kwonlyargs)
+    for i, p in enumerate(params):
+        if p.arg not in snames and i not in snums:
+            continue
+        root = _annotation_root(p.annotation)
+        if root in _UNHASHABLE_ANNOTATIONS:
+            out.append(_finding(
+                project, mod, site, "JL301",
+                f"jit static argument '{p.arg}' of "
+                f"'{getattr(target, 'name', '<lambda>')}' is annotated "
+                f"'{root}' — unhashable statics raise TypeError at call "
+                f"time; pass a tuple/frozen type or make it traced"))
+            continue
+        frozen = _resolve_dataclass(project, mod, p.annotation)
+        if frozen is False:
+            out.append(_finding(
+                project, mod, site, "JL302",
+                f"jit static argument '{p.arg}' of "
+                f"'{getattr(target, 'name', '<lambda>')}' is a non-frozen "
+                f"dataclass ('{_annotation_root(p.annotation)}') — it "
+                f"hashes by identity, so every equal-but-new instance "
+                f"recompiles; declare the dataclass frozen=True"))
+    return out
+
+
+def _defaults_check(project: Project, mod: Module, target: ast.AST,
+                    site: ast.AST, snames: Set[str],
+                    snums: Set[int]) -> List[Finding]:
+    """Static params whose default is a dict/list/set literal."""
+    out: List[Finding] = []
+    args = target.args
+    pos = list(getattr(args, "posonlyargs", [])) + list(args.args)
+    defaults = list(args.defaults)
+    offset = len(pos) - len(defaults)
+    for j, d in enumerate(defaults):
+        i = offset + j
+        p = pos[i]
+        if p.arg not in snames and i not in snums:
+            continue
+        if isinstance(d, (ast.Dict, ast.List, ast.Set, ast.ListComp,
+                          ast.DictComp, ast.SetComp)):
+            out.append(_finding(
+                project, mod, site, "JL301",
+                f"jit static argument '{p.arg}' of "
+                f"'{getattr(target, 'name', '<lambda>')}' defaults to an "
+                f"unhashable {type(d).__name__.lower()} literal"))
+    return out
+
+
+@register_rule("JL3", "recompile-hygiene",
+               "unhashable/mutable jit statics and jit wrappers created "
+               "inside loops")
+def check_jl3(project: Project):
+    findings: List[Finding] = []
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            # decorated defs: @jax.jit / @functools.partial(jax.jit, ...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    jit = is_jit_expr(dec)
+                    if jit is None:
+                        continue
+                    snames, snums = _jit_statics(jit)
+                    findings.extend(_check_statics(
+                        project, mod, node, dec, snames, snums))
+                    findings.extend(_defaults_check(
+                        project, mod, node, dec, snames, snums))
+            # call form: jax.jit(f, static_...)
+            elif isinstance(node, ast.Call):
+                target = jit_target_of(node)
+                if target is not None and isinstance(target, ast.Name):
+                    scope = _scope_of(mod, node)
+                    resolved = project.resolve_call(mod, scope, target)
+                    if resolved is not None:
+                        snames, snums = _jit_statics(node)
+                        findings.extend(_check_statics(
+                            project, mod, resolved.node, node, snames,
+                            snums))
+                # JL303: a jit wrapper born inside a Python loop
+                if is_jit_expr(node) is not None and _in_loop(mod, node):
+                    findings.append(_finding(
+                        project, mod, node, "JL303",
+                        "jax.jit wrapper created inside a loop — each "
+                        "iteration builds a fresh callable with an empty "
+                        "trace cache, so the loop retraces every pass; "
+                        "hoist the jit out of the loop or cache the "
+                        "wrapper"))
+    return findings
+
+
+def _scope_of(mod: Module, node: ast.AST):
+    chain = []
+    cur = mod.parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            chain.insert(0, cur)
+        cur = mod.parent(cur)
+    return chain
+
+
+def _in_loop(mod: Module, node: ast.AST) -> bool:
+    """Lexically inside a for/while body, within the same function."""
+    cur = mod.parent(node)
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            return False
+        if isinstance(cur, (ast.For, ast.While)):
+            return True
+        cur = mod.parent(cur)
+    return False

@@ -1,0 +1,117 @@
+"""JL4 — leading-B shape convention.
+
+Since PR 5 every engine-facing structure and function is batch-major: a
+``*_batch`` / ``batch_*`` function takes and returns leaves with a leading
+``(B,)`` query axis, and registered DistFns operate on ``(B, M, R)``
+candidate grids.  Two drift modes this rule family catches:
+
+* **JL401** — a batch-named function (or a registered backend's DistFn
+  chain) whose docstring never states the convention.  The batch axis is
+  invisible in the code (jnp broadcasting hides it until shapes collide at
+  a call site three layers away), so the docstring *is* the contract.
+* **JL402** — a full flatten ``.reshape(-1)`` inside a batch-named function
+  in ``core/``: collapsing ``(B, ...)`` to one axis silently fuses queries
+  and is the classic way per-query counters go wrong.  Legitimate
+  cross-lane flattens (batch-dedup accounting) carry an explicit
+  justification suppression.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Optional
+
+from tools.jaxlint.backends import find_registered_backends
+from tools.jaxlint.model import Finding, register_rule
+from tools.jaxlint.project import Module, Project
+
+_BATCH_NAME = re.compile(r"(^batch_)|(_batch$)|(_batch_)")
+
+
+def _finding(project: Project, mod: Module, node: ast.AST, rule: str,
+             message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    sup = project.suppression_for(mod, line, rule)
+    return Finding(rule=rule, path=mod.relpath, line=line,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   suppressed=sup is not None,
+                   justification=sup.justification if sup else "")
+
+
+def _documents_batch_axis(doc: Optional[str]) -> bool:
+    if not doc:
+        return False
+    return "(B" in doc or "batch" in doc.lower()
+
+
+def _is_batch_named(name: str) -> bool:
+    return bool(_BATCH_NAME.search(name))
+
+
+def _full_flattens(node: ast.AST) -> List[ast.Call]:
+    """`.reshape(-1)` calls — a single argument of constant -1 — inside
+    ``node``, nested defs excluded (they get their own check)."""
+    out: List[ast.Call] = []
+    stack = list(node.body)
+    while stack:
+        cur = stack.pop()
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            continue
+        if isinstance(cur, ast.Call) \
+                and isinstance(cur.func, ast.Attribute) \
+                and cur.func.attr == "reshape" and len(cur.args) == 1:
+            a = cur.args[0]
+            if isinstance(a, ast.UnaryOp) and isinstance(a.op, ast.USub) \
+                    and isinstance(a.operand, ast.Constant) \
+                    and a.operand.value == 1:
+                out.append(cur)
+        stack.extend(ast.iter_child_nodes(cur))
+    return out
+
+
+@register_rule("JL4", "shape-convention",
+               "leading-B axis documentation on batch-named functions and "
+               "registered backends; batch-axis-dropping flattens in core/")
+def check_jl4(project: Project):
+    findings: List[Finding] = []
+    for mod in project.modules:
+        in_core = "/core/" in ("/" + mod.relpath)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not _is_batch_named(node.name):
+                continue
+            if not _documents_batch_axis(ast.get_docstring(node)):
+                findings.append(_finding(
+                    project, mod, node, "JL401",
+                    f"batch-named function '{node.name}' does not document "
+                    f"the leading-B axis convention (docstring should "
+                    f"state the (B, ...) shapes it takes/returns)"))
+            if in_core:
+                for call in _full_flattens(node):
+                    findings.append(_finding(
+                        project, mod, call, "JL402",
+                        f".reshape(-1) in batch-major '{node.name}' "
+                        f"flattens the leading batch axis into the data "
+                        f"axis — per-query accounting breaks silently; "
+                        f"reshape to (B, -1) or justify with a "
+                        f"suppression"))
+    # registered DistFns: the convention may be documented anywhere in the
+    # factory -> maker -> dist_fn chain (nested dist_fn defs are typically
+    # undocumented; their maker's docstring is the contract statement)
+    for reg in find_registered_backends(project):
+        chain_docs = [ast.get_docstring(r.node) for r in reg.chain
+                      if not isinstance(r.node, ast.Lambda)]
+        term_docs = [ast.get_docstring(t.node) for t in reg.terminals
+                     if not isinstance(t.node, ast.Lambda)]
+        if not any(_documents_batch_axis(d) for d in chain_docs + term_docs):
+            site = reg.factory.decorator_list[0] \
+                if reg.factory.decorator_list else reg.factory
+            findings.append(_finding(
+                project, reg.module, site, "JL401",
+                f"backend {reg.name!r}: neither the factory, its makers, "
+                f"nor the DistFn documents the batch-major (B, M, R) "
+                f"contract"))
+    return findings

@@ -1,0 +1,474 @@
+"""Traced-value analysis: the engine behind the JL1 purity rules.
+
+The model mirrors how tracing actually works:
+
+* **Roots.**  Parameters of jit entry points (``@jax.jit`` decorations and
+  ``jax.jit(f)`` call sites, minus ``static_argnums``/``static_argnames``),
+  every parameter of ``lax.while_loop``/``scan``/``cond``/``fori_loop``/
+  ``switch`` bodies, ``vmap``/``pmap``/``shard_map``/``grad`` targets,
+  ``pallas_call`` kernels, and registered distance backends' DistFns (the
+  search engine reaches those through indirection no call graph can see, so
+  the registry contract seeds them directly).
+* **Taint.**  Inside a traced function, locals assigned from traced values
+  become traced; shape-derived metadata (``x.shape``/``ndim``/``dtype``/
+  ``size`` plus the project's static properties such as ``n_nodes``) stays
+  static, exactly as under tracing.  Closure variables keep the taint they
+  have in the enclosing function — a closed-over concrete array is a trace
+  constant, not a tracer, so untainted closure state never raises findings.
+* **Propagation.**  Calls resolved to project functions forward taint from
+  argument expressions to parameters, to a fixpoint across modules.
+
+Violations are Python-level uses that would concretize a tracer: ``if`` /
+``while`` / ``assert`` on a traced value (``x is None`` checks and shape
+predicates are static and exempt), ``int()``/``float()``/``bool()`` /
+``.item()``/``.tolist()`` on one, and ``np.*`` calls over one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.jaxlint.backends import find_registered_backends
+from tools.jaxlint.model import Finding
+from tools.jaxlint.project import FnRef, Module, Project, dotted_name
+
+# primitives whose function-valued arguments trace with all params traced;
+# value = indices of function arguments.  Bare (un-dotted) names are only
+# honoured for the unambiguous ones (see _primitive_fn_args).
+_CONTROL_PRIMS = {
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "scan": (0,),
+    "cond": (1, 2),
+    "switch": (1,),
+    "map": (0,),
+    "pallas_call": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "shard_map": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+}
+_UNAMBIGUOUS_BARE = {"while_loop", "fori_loop", "pallas_call", "shard_map",
+                     "vmap", "pmap"}
+_JAX_TOPLEVEL = {"grad", "value_and_grad", "checkpoint", "remat"}
+_TREE_MAP_SUFFIXES = ("tree.map", "tree_map", "tree_util.tree_map")
+
+
+def _fn_params(node: ast.AST) -> List[str]:
+    a = node.args
+    names = [p.arg for p in getattr(a, "posonlyargs", []) + a.args]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    names += [p.arg for p in a.kwonlyargs]
+    return names
+
+
+def _jit_statics(call_or_dec: ast.AST) -> Tuple[Set[str], Set[int]]:
+    """static_argnames/static_argnums of a jit call/partial expression."""
+    names: Set[str] = set()
+    nums: Set[int] = set()
+    if not isinstance(call_or_dec, ast.Call):
+        return names, nums
+    for kw in call_or_dec.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return names, nums
+
+
+def jit_target_of(call: ast.Call) -> Optional[ast.expr]:
+    """The wrapped-function expression if ``call`` is jax.jit(f, ...) or
+    functools.partial(jax.jit, ...)(f) — None otherwise."""
+    name = dotted_name(call.func)
+    if name in ("jax.jit", "jit") and call.args:
+        return call.args[0]
+    return None
+
+
+def is_jit_expr(expr: ast.expr) -> Optional[ast.AST]:
+    """``expr`` is jax.jit / partial(jax.jit, ...) usable as a decorator or
+    a wrapper; returns the node carrying static kwargs, else None."""
+    name = dotted_name(expr)
+    if name in ("jax.jit", "jit"):
+        return expr
+    if isinstance(expr, ast.Call):
+        fname = dotted_name(expr.func)
+        if fname in ("jax.jit", "jit"):
+            return expr
+        if fname in ("functools.partial", "partial") and expr.args \
+                and dotted_name(expr.args[0]) in ("jax.jit", "jit"):
+            return expr
+    return None
+
+
+def _primitive_fn_args(call: ast.Call) -> Iterable[ast.expr]:
+    """Function-valued argument expressions of a control-flow primitive."""
+    name = dotted_name(call.func)
+    if not name:
+        return ()
+    parts = name.split(".")
+    leaf = parts[-1]
+    spec = _CONTROL_PRIMS.get(leaf)
+    if spec is None:
+        return ()
+    if "." not in name and leaf not in _UNAMBIGUOUS_BARE:
+        return ()   # bare `cond`/`map`/`scan`/... could be anything
+    if "." in name and leaf not in _UNAMBIGUOUS_BARE \
+            and "lax" not in parts[:-1] \
+            and not (parts[0] == "jax" and leaf in _JAX_TOPLEVEL):
+        return ()   # tree.map / itertools-style .map etc. are not lax
+    out: List[ast.expr] = []
+    for i in spec:
+        if i < len(call.args):
+            arg = call.args[i]
+            # lax.switch takes a *list* of branches
+            if isinstance(arg, (ast.List, ast.Tuple)):
+                out.extend(arg.elts)
+            else:
+                out.append(arg)
+    return out
+
+
+class TracedAnalysis:
+    """Fixpoint propagation of traced parameters plus violation checks."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.static_attrs = project.static_attrs
+        # id(fn node) -> (FnRef, traced param names, inherited taint)
+        self.state: Dict[int, Tuple[FnRef, Set[str], Set[str]]] = {}
+        self.findings: Dict[Tuple, Finding] = {}
+        self._work: List[Tuple[FnRef, Set[str], Set[str]]] = []
+
+    # -- public entry ------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        self._seed()
+        guard = 0
+        while self._work and guard < 100_000:
+            guard += 1
+            fn, params, inherited = self._work.pop()
+            self._analyze(fn, params, inherited)
+        return sorted(self.findings.values(),
+                      key=lambda f: (f.path, f.line, f.rule))
+
+    # -- seeding -----------------------------------------------------------
+
+    def _enqueue(self, fn: FnRef, params: Set[str],
+                 inherited: Set[str] = frozenset()) -> None:
+        key = id(fn.node)
+        cur = self.state.get(key)
+        if cur is not None and params <= cur[1] and inherited <= cur[2]:
+            return
+        merged_p = (cur[1] | params) if cur else set(params)
+        merged_i = (cur[2] | inherited) if cur else set(inherited)
+        self.state[key] = (fn, merged_p, merged_i)
+        self._work.append((fn, merged_p, merged_i))
+
+    def _seed(self) -> None:
+        for mod in self.project.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._seed_decorated(mod, node)
+                elif isinstance(node, ast.Call):
+                    self._seed_call(mod, node)
+        for reg in find_registered_backends(self.project):
+            for term in reg.terminals:
+                self._enqueue(term, set(_fn_params(term.node)))
+
+    def _seed_decorated(self, mod: Module, node: ast.AST) -> None:
+        for dec in node.decorator_list:
+            jit = is_jit_expr(dec)
+            if jit is None:
+                continue
+            snames, snums = _jit_statics(jit)
+            params = _fn_params(node)
+            traced = {p for i, p in enumerate(params)
+                      if p not in snames and i not in snums}
+            self._enqueue(FnRef(mod, node), traced)
+
+    def _seed_call(self, mod: Module, call: ast.Call) -> None:
+        scope = self._scope_chain(mod, call)
+        target = jit_target_of(call)
+        if target is not None:
+            snames, snums = _jit_statics(call)
+            self._seed_fn_expr(mod, scope, target, snames, snums)
+        # partial(jax.jit, ...) produces a jit-to-be; the eventual target is
+        # usually syntactically adjacent only in decorator form (handled
+        # above), so bare partials are left to JL3's loop check.
+        for fexpr in _primitive_fn_args(call):
+            self._seed_fn_expr(mod, scope, fexpr, set(), set())
+
+    def _seed_fn_expr(self, mod: Module, scope: List[ast.AST],
+                      fexpr: ast.expr, snames: Set[str],
+                      snums: Set[int]) -> None:
+        if isinstance(fexpr, ast.Lambda):
+            fn = FnRef(mod, fexpr)
+        else:
+            resolved = self.project.resolve_call(mod, scope, fexpr)
+            if resolved is None:
+                return
+            fn = resolved
+        params = _fn_params(fn.node)
+        traced = {p for i, p in enumerate(params)
+                  if p not in snames and i not in snums}
+        self._enqueue(fn, traced)
+
+    # -- scope helpers -----------------------------------------------------
+
+    def _scope_chain(self, mod: Module, node: ast.AST) -> List[ast.AST]:
+        chain: List[ast.AST] = []
+        cur: Optional[ast.AST] = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                chain.insert(0, cur)
+            cur = mod.parent(cur)
+        return chain
+
+    # -- taint -------------------------------------------------------------
+
+    def _effective_refs(self, mod: Module, expr: ast.expr,
+                        taint: Set[str]) -> List[ast.Name]:
+        """Traced-name references in ``expr`` that are *data* uses — i.e.
+        excluding shape/metadata access, `is None` tests, len/isinstance,
+        and call positions."""
+        refs: List[ast.Name] = []
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in taint \
+                    and not self._static_context(mod, n):
+                refs.append(n)
+        return refs
+
+    def _static_context(self, mod: Module, name: ast.Name) -> bool:
+        # climb the attribute chain: graph.nbrs.shape[0] is static because
+        # `shape` appears along it; stop at the first non-Attribute parent
+        node: ast.AST = name
+        parent = mod.parent(node)
+        while isinstance(parent, ast.Attribute) and parent.value is node:
+            if parent.attr in self.static_attrs:
+                return True
+            node, parent = parent, mod.parent(parent)
+        if isinstance(parent, ast.Subscript) and parent.value is node:
+            # x[...] reads data; but climb no further — the subscript result
+            # is a data value (handled by whoever contains the Subscript)
+            return False
+        if isinstance(parent, ast.Call):
+            if parent.func is node and node is name:
+                # a bare name in callee position is a function object, not
+                # data; a method call (x.sum()) on traced data is a data use
+                return True
+            fname = dotted_name(parent.func)
+            if fname in ("len", "isinstance", "type", "getattr", "hasattr"):
+                return True
+        if isinstance(parent, ast.Compare):
+            sides = [parent.left] + list(parent.comparators)
+            if node in sides and all(isinstance(op, (ast.Is, ast.IsNot))
+                                     for op in parent.ops):
+                others = [s for s in sides if s is not node]
+                if all(isinstance(s, ast.Constant) and s.value is None
+                       for s in others):
+                    return True
+        return False
+
+    def _compute_taint(self, mod: Module, node: ast.AST,
+                       taint: Set[str]) -> Set[str]:
+        """Forward may-taint over the function's own statements (nested
+        defs excluded; two passes cover loop-carried assignments)."""
+        taint = set(taint)
+        stmts = self._own_statements(node)
+        for _ in range(2):
+            for stmt in stmts:
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign)):
+                    value = stmt.value
+                    if value is None:
+                        continue
+                    if self._effective_refs(mod, value, taint):
+                        targets = stmt.targets if isinstance(
+                            stmt, ast.Assign) else [stmt.target]
+                        for t in targets:
+                            for n in ast.walk(t):
+                                if isinstance(n, ast.Name):
+                                    taint.add(n.id)
+                elif isinstance(stmt, ast.For):
+                    if self._effective_refs(mod, stmt.iter, taint):
+                        for n in ast.walk(stmt.target):
+                            if isinstance(n, ast.Name):
+                                taint.add(n.id)
+        return taint
+
+    def _own_statements(self, node: ast.AST) -> List[ast.stmt]:
+        out: List[ast.stmt] = []
+        body = getattr(node, "body", [])
+        if not isinstance(body, list):   # Lambda: a single expression
+            return out
+        stack = list(body)
+        while stack:
+            stmt = stack.pop()
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.stmt):
+                out.append(stmt)
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.stmt):
+                    stack.append(child)
+        return out
+
+    # -- analysis ----------------------------------------------------------
+
+    def _analyze(self, fn: FnRef, params: Set[str],
+                 inherited: Set[str]) -> None:
+        mod, node = fn.module, fn.node
+        taint = self._compute_taint(mod, node, params | inherited)
+        scope = self._scope_chain(mod, node)
+        if not isinstance(node, ast.Lambda) and node not in scope:
+            scope.append(node)
+
+        body = node.body if isinstance(node.body, list) else [node.body]
+        stack: List[ast.AST] = list(body)
+        while stack:
+            cur = stack.pop()
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # lexical child: traced params come from its own seeds (if
+                # any); closure taint is inherited from here
+                key = id(cur)
+                own = self.state.get(key)
+                self._enqueue(FnRef(mod, cur),
+                              own[1] if own else set(), taint)
+                continue
+            if isinstance(cur, ast.Lambda):
+                key = id(cur)
+                own = self.state.get(key)
+                self._enqueue(FnRef(mod, cur),
+                              own[1] if own else set(), taint)
+                continue
+            if isinstance(cur, (ast.If, ast.While)):
+                self._check_branch(fn, cur.test, taint,
+                                   "while" if isinstance(cur, ast.While)
+                                   else "if")
+            elif isinstance(cur, ast.IfExp):
+                self._check_branch(fn, cur.test, taint, "conditional")
+            elif isinstance(cur, ast.Assert):
+                refs = self._effective_refs(mod, cur.test, taint)
+                if refs:
+                    self._emit("JL102", fn, cur,
+                               f"`assert` on traced value(s) "
+                               f"{self._names(refs)} in '{fn.name}' — "
+                               f"asserts vanish under tracing; use "
+                               f"checkify or a host_callback check")
+            elif isinstance(cur, ast.Call):
+                self._check_call(fn, cur, taint, scope)
+            stack.extend(ast.iter_child_nodes(cur))
+
+    def _check_branch(self, fn: FnRef, test: ast.expr, taint: Set[str],
+                      kind: str) -> None:
+        refs = self._effective_refs(fn.module, test, taint)
+        if refs:
+            self._emit("JL101", fn, test,
+                       f"data-dependent Python `{kind}` on traced value(s) "
+                       f"{self._names(refs)} in '{fn.name}' — use "
+                       f"jnp.where / lax.cond / lax.while_loop")
+
+    def _check_call(self, fn: FnRef, call: ast.Call, taint: Set[str],
+                    scope: List[ast.AST]) -> None:
+        mod = fn.module
+        fname = dotted_name(call.func)
+        arg_exprs = list(call.args) + [kw.value for kw in call.keywords]
+
+        # JL103: int()/float()/bool() over a traced value
+        if fname in ("int", "float", "bool", "complex"):
+            refs: List[ast.Name] = []
+            for a in arg_exprs:
+                refs.extend(self._effective_refs(mod, a, taint))
+            if refs:
+                self._emit("JL103", fn, call,
+                           f"`{fname}()` concretizes traced value(s) "
+                           f"{self._names(refs)} in '{fn.name}' — this "
+                           f"raises TracerError under jit")
+        # JL103: .item() / .tolist() on a traced value
+        if isinstance(call.func, ast.Attribute) \
+                and call.func.attr in ("item", "tolist"):
+            refs = self._effective_refs(mod, call.func.value, taint)
+            if refs:
+                self._emit("JL103", fn, call,
+                           f"`.{call.func.attr}()` concretizes traced "
+                           f"value(s) {self._names(refs)} in '{fn.name}'")
+        # JL104: numpy call over a traced value
+        root = fname.split(".")[0] if fname else ""
+        is_np = root in ("np", "numpy") or \
+            mod.import_aliases.get(root, "") == "numpy"
+        if is_np and "." in fname:
+            refs = []
+            for a in arg_exprs:
+                refs.extend(self._effective_refs(mod, a, taint))
+            if refs:
+                self._emit("JL104", fn, call,
+                           f"`{fname}` on traced value(s) "
+                           f"{self._names(refs)} in '{fn.name}' — numpy "
+                           f"forces a host transfer/concretization; use "
+                           f"jnp")
+
+        # seeds that only become visible inside traced code (local lambdas
+        # passed to primitives are already caught by the global scan, but
+        # closure taint must flow in, so re-seed here with current taint)
+        for fexpr in _primitive_fn_args(call):
+            if isinstance(fexpr, ast.Lambda):
+                self._enqueue(FnRef(mod, fexpr),
+                              set(_fn_params(fexpr)), taint)
+            else:
+                resolved = self.project.resolve_call(mod, scope, fexpr)
+                if resolved is not None:
+                    self._enqueue(resolved, set(_fn_params(resolved.node)),
+                                  taint if resolved.module is mod else set())
+
+        # jax.tree.map(f, *trees): f traces over leaves of tainted trees
+        if fname and fname.endswith(_TREE_MAP_SUFFIXES) and call.args:
+            tainted_tree = any(self._effective_refs(mod, a, taint)
+                               for a in call.args[1:])
+            if tainted_tree:
+                self._seed_fn_expr(mod, scope, call.args[0], set(), set())
+
+        # propagate taint through calls to project functions
+        resolved = self.project.resolve_call(mod, scope, call.func)
+        if resolved is None:
+            return
+        callee_params = _fn_params(resolved.node)
+        tainted_params: Set[str] = set()
+        for i, a in enumerate(call.args):
+            if isinstance(a, ast.Starred):
+                continue
+            if i < len(callee_params) \
+                    and self._effective_refs(mod, a, taint):
+                tainted_params.add(callee_params[i])
+        for kw in call.keywords:
+            if kw.arg and kw.arg in callee_params \
+                    and self._effective_refs(mod, kw.value, taint):
+                tainted_params.add(kw.arg)
+        if tainted_params:
+            self._enqueue(resolved, tainted_params)
+
+    # -- emission ----------------------------------------------------------
+
+    @staticmethod
+    def _names(refs: List[ast.Name]) -> str:
+        return ", ".join(sorted({f"'{r.id}'" for r in refs}))
+
+    def _emit(self, rule: str, fn: FnRef, node: ast.AST,
+              message: str) -> None:
+        mod = fn.module
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        sup = self.project.suppression_for(mod, line, rule)
+        f = Finding(rule=rule, path=mod.relpath, line=line, col=col,
+                    message=message, suppressed=sup is not None,
+                    justification=sup.justification if sup else "")
+        self.findings.setdefault((rule, mod.relpath, line, col, message), f)
