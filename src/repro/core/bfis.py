@@ -213,6 +213,8 @@ def _init_state_batch(
     graph: PaddedCSR, queries: jax.Array, cfg: SearchConfig,
     start: Optional[jax.Array],
 ) -> _TopMState:
+    """Batch-major initial state for (B, d) queries: frontier (B, L),
+    visited (B, ...), stats leaves (B,), seeded at the entry point."""
     bsz = queries.shape[0]
     frontier = fq.make_frontier_batch(cfg.queue_len, bsz)
     visited = vs.make_visited_batch(cfg.visited_mode, graph.n_nodes, bsz,
@@ -310,7 +312,9 @@ def search_topm(
 
 
 def bfis_search_batch(graph, queries, cfg: SearchConfig, **kw):
-    """Algorithm 1 (the NSG baseline): top-M search with M=1, no staging."""
+    """Algorithm 1 (the NSG baseline): top-M search with M=1, no staging,
+    batch-major over (B, d) queries -> (ids (B, k), dists (B, k),
+    stats (B,))."""
     return search_topm_batch(
         graph, queries, cfg.with_(m_max=1, staged=False), **kw)
 

@@ -95,6 +95,8 @@ def batch_unique_counts(ids: jax.Array, counted: jax.Array) -> jax.Array:
     elementwise with equality iff no id is shared across lanes.
     """
     b, c = ids.shape
+    # jaxlint: ignore[JL402] -- cross-lane flatten is the point: first-
+    # toucher attribution sorts the whole batch's ids in one (B*C,) stream
     flat = jnp.where(counted, ids, _UNIQ_SENTINEL).reshape(-1)
     lane = jnp.repeat(jnp.arange(b, dtype=jnp.int32), c)
     sorted_ids, sorted_lane = jax.lax.sort((flat, lane), num_keys=1,

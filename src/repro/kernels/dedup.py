@@ -246,8 +246,9 @@ def make_dedup_dist_fn(metric: str = "l2", tile: int = TILE):
 
 
 def make_dedup_int8_dist_fn(metric: str = "l2", tile: int = TILE):
-    """int8-codes dedup DistFn (per-vector scales only, like
-    ``rowgather_int8``)."""
+    """Batch-major int8 dedup DistFn ((B, M, R) ids in, (B, M, R) f32 out;
+    the batch's distinct code rows are gathered once).  Per-vector scales
+    only, like ``rowgather_int8``."""
     from repro.quant.kernels import require_codes
 
     def dist_fn(graph, active_ids, nbr_ids, queries):

@@ -93,6 +93,8 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
 
 
 def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """NamedShardings for the input batch: every spec carries the leading
+    ("batch", ...) axis (token/target/mask grids, (B, 1) decode tokens)."""
     logical = {
         "tokens": ("batch", "seq"), "targets": ("batch", "seq"),
         "mask": ("batch", "seq"),
