@@ -72,19 +72,19 @@ def topl_merge(
     """
     invalid = jnp.int32(2**31 - 1)
     big = jnp.float32(jnp.inf)
-    bsz, l = q_ids.shape
+    bsz, qlen = q_ids.shape
     c = c_ids.shape[1]
     n = 1
-    while n < l + c:
+    while n < qlen + c:
         n *= 2
-    pad = n - (l + c)
+    pad = n - (qlen + c)
 
     ids = jnp.concatenate(
         [q_ids, c_ids, jnp.full((bsz, pad), invalid, jnp.int32)], axis=1)
     dists = jnp.concatenate(
         [q_dists, c_dists, jnp.full((bsz, pad), big, jnp.float32)], axis=1)
     is_new = jnp.concatenate(
-        [jnp.zeros((bsz, l), jnp.int32), jnp.ones((bsz, c), jnp.int32),
+        [jnp.zeros((bsz, qlen), jnp.int32), jnp.ones((bsz, c), jnp.int32),
          jnp.zeros((bsz, pad), jnp.int32)], axis=1)
     meta = jnp.concatenate(
         [q_meta.astype(jnp.int32), jnp.zeros((bsz, c + pad), jnp.int32)],
@@ -115,6 +115,6 @@ def topl_merge(
     # pass 2: by (dist, id)
     d2, i2, pk2 = sort_pairs(dists_g, ids_g, packed_g, interpret=interpret)
     rank = jnp.arange(n, dtype=jnp.int32)[None, :]
-    surv = (pk2 & 1 == 1) & (i2 != invalid) & (rank < l)
-    up = jnp.min(jnp.where(surv, rank, l), axis=1).astype(jnp.int32)
-    return d2[:, :l], i2[:, :l], (pk2[:, :l] >> 1), up
+    surv = (pk2 & 1 == 1) & (i2 != invalid) & (rank < qlen)
+    up = jnp.min(jnp.where(surv, rank, qlen), axis=1).astype(jnp.int32)
+    return d2[:, :qlen], i2[:, :qlen], (pk2[:, :qlen] >> 1), up

@@ -66,7 +66,7 @@ def topl_merge_ref(
     (dist, id) top-L with the update position per row.
     """
     big = jnp.float32(jnp.inf)
-    l = q_ids.shape[-1]
+    qlen = q_ids.shape[-1]
     ids = jnp.concatenate([q_ids, c_ids], axis=-1)
     dists = jnp.concatenate([q_dists, c_dists], axis=-1)
     meta = jnp.concatenate(
@@ -86,6 +86,6 @@ def topl_merge_ref(
     dists, ids, meta, is_new = jax.lax.sort(
         (dists, ids, meta, is_new), num_keys=2, is_stable=True, dimension=-1)
     rank = jnp.arange(ids.shape[-1], dtype=jnp.int32)
-    surv = (is_new == 1) & (ids != invalid_id) & (rank < l)
-    up = jnp.min(jnp.where(surv, rank, l), axis=-1).astype(jnp.int32)
-    return dists[..., :l], ids[..., :l], meta[..., :l], up
+    surv = (is_new == 1) & (ids != invalid_id) & (rank < qlen)
+    up = jnp.min(jnp.where(surv, rank, qlen), axis=-1).astype(jnp.int32)
+    return dists[..., :qlen], ids[..., :qlen], meta[..., :qlen], up

@@ -127,7 +127,7 @@ def maybe_scan(body, carry, xs, use_scan: bool):
     length = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(length):
-        x_i = jax.tree.map(lambda t: t[i], xs)
+        x_i = jax.tree.map(lambda t, i=i: t[i], xs)
         carry, y = body(carry, x_i)
         ys.append(y)
     if ys and ys[0] is not None:

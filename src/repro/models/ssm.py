@@ -65,11 +65,11 @@ def _segsum(x: jax.Array) -> jax.Array:
 
     seg[i, j] = sum_{t=j+1..i} x_t for j < i (the decay an input at j suffers
     before being read at i), 0 on the diagonal, -inf above (causality)."""
-    l = x.shape[-1]
+    seqlen = x.shape[-1]
     cs = jnp.cumsum(x, axis=-1)
     seg = cs[..., :, None] - cs[..., None, :]
-    mask = jnp.tril(jnp.ones((l, l), bool), k=-1)
-    diag = jnp.eye(l, dtype=bool)
+    mask = jnp.tril(jnp.ones((seqlen, seqlen), bool), k=-1)
+    diag = jnp.eye(seqlen, dtype=bool)
     return jnp.where(mask, seg, jnp.where(diag, 0.0, -jnp.inf))
 
 
