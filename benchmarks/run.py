@@ -30,6 +30,10 @@ def main() -> None:
                          "(skips the figure suite)")
     ap.add_argument("--serve-out", default="BENCH_serve.json",
                     help="output path for --sweep-serve")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --sweep-serve: dump Chrome-trace/Perfetto "
+                         "JSON of the highest-QPS sweep point here "
+                         "(open in ui.perfetto.dev)")
     ap.add_argument("--sweep-batch", action="store_true",
                     help="batch-amortization sweep of the batch-major "
                          "engine (B x backend); appends rows to "
@@ -48,7 +52,7 @@ def main() -> None:
 
     if args.sweep_serve:
         from benchmarks import serve_load
-        serve_load.sweep(args.serve_out)
+        serve_load.sweep(args.serve_out, trace_out=args.trace_out)
         return
 
     from benchmarks import paper_figs

@@ -113,24 +113,43 @@ def offered_load(srv, queries: np.ndarray, qps: float, duration_s: float,
 def sweep(out_path: str = "BENCH_serve.json", n: int = 2000, q: int = 32,
           qps_ladder: Sequence[float] = QPS_LADDER,
           duration_s: float = 1.5, backend: str = "ref",
-          max_wait_ms: float = 2.0) -> Dict:
-    """One row per offered-QPS point; appends to the JSON trajectory."""
+          max_wait_ms: float = 2.0,
+          trace_out: Optional[str] = None) -> Dict:
+    """One row per offered-QPS point; appends to the JSON trajectory.
+
+    With ``trace_out`` the HIGHEST-QPS sweep point runs with request-scoped
+    tracing on and dumps its Chrome-trace/Perfetto JSON there — the point
+    where coalescing actually forms multi-request batches, so the trace
+    shows nested batch_formation → dispatch → device_compute spans.
+    Tracing stays off for every other point (and entirely without
+    ``trace_out``), so the sweep's latency numbers are untraced.
+    """
+    from repro.obs import Observability
+
     ds = dataset(n=n, q=q)
     index = nsg_index(ds, degree=16)
     params = PARAMS.with_(backend=backend)
     host = platform.node() or platform.machine()
     queries = np.asarray(ds.queries, np.float32)
+    traced_qps = max(qps_ladder) if trace_out else None
 
     rows = []
     for qps in qps_ladder:
+        obs = (Observability(tracing=True, metrics=False)
+               if qps == traced_qps else None)
         srv = index.serve_async(params, max_wait_ms=max_wait_ms,
-                                bucket_sizes=BUCKETS)
+                                bucket_sizes=BUCKETS, obs=obs)
         srv.engine.warmup(queries.shape[1])      # compiles outside the clock
         try:
             load = offered_load(srv, queries, qps, duration_s)
         finally:
             srv.close()
+        if obs is not None:
+            obs.write_trace(trace_out)
+            print(f"# wrote {trace_out} "
+                  f"({obs.tracer.n_events} trace events at qps={qps:g})")
         cstats = srv.stats()
+        estats = srv.engine.stats()
         row = {
             "mode": "async_coalesced",
             "backend": backend,
@@ -143,6 +162,11 @@ def sweep(out_path: str = "BENCH_serve.json", n: int = 2000, q: int = 32,
             "max_batch": srv.policy.max_batch,
             "max_wait_ms": max_wait_ms,
             "batch_size_mean": cstats.get("batch_size_mean", 1.0),
+            # the tail DECOMPOSED: time queued before dispatch vs. engine
+            # wall clock per dispatched batch — the split that says whether
+            # a fat p99 is a queueing problem or a compute problem
+            "queue_wait_p99_ms": cstats.get("queue_wait_p99_ms", 0.0),
+            "compute_p99_ms": estats.get("latency_p99_ms", 0.0),
             "unix_time": time.time(),
             **load,
         }
@@ -151,6 +175,8 @@ def sweep(out_path: str = "BENCH_serve.json", n: int = 2000, q: int = 32,
               f"{row.get('latency_p50_ms', float('nan')):.1f},"
               f"p95={row.get('latency_p95_ms', float('nan')):.1f};"
               f"p99={row.get('latency_p99_ms', float('nan')):.1f};"
+              f"qwait_p99={row['queue_wait_p99_ms']:.1f};"
+              f"compute_p99={row['compute_p99_ms']:.1f};"
               f"achieved={row['qps_achieved']:.0f}qps;"
               f"batch_mean={row['batch_size_mean']:.1f}")
 

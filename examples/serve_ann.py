@@ -20,7 +20,8 @@ synchronization, bounded budgets) runs with the distance backend picked by
     PYTHONPATH=src python examples/serve_ann.py [--batches 20] \
         [--max-batch 32] [--dist-backend ref|rowgather|dma|ref_int8|...] \
         [--metric l2|ip|cosine] [--quant none|int8|bf16] [--rerank-k 30] \
-        [--async-client --qps 50 --deadline-ms 200] [--sharded]
+        [--async-client --qps 50 --deadline-ms 200] [--sharded] \
+        [--trace-out trace.json]
 
 ``--quant int8 --dist-backend ref_int8 --rerank-k 30`` serves the two-stage
 quantized configuration: int8 traversal, exact f32 re-ranking — the engine
@@ -71,6 +72,11 @@ def main():
                          "(default: none)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="coalescer max-wait flush for --async-client")
+    ap.add_argument("--trace-out", default=None,
+                    help="record request-scoped spans and write "
+                         "Chrome-trace/Perfetto JSON here (open in "
+                         "ui.perfetto.dev); also prints the metrics "
+                         "registry (docs/observability.md)")
     args = ap.parse_args()
 
     print("== Speed-ANN serving driver ==")
@@ -88,9 +94,13 @@ def main():
 
     buckets = tuple(b for b in (1, 2, 4, 8, 16, 32, 64, 128)
                     if b <= args.max_batch)
+    obs = None
+    if args.trace_out:
+        from repro.obs import Observability
+        obs = Observability(tracing=True, metrics=True)
     if args.async_client:
-        return serve_async_clients(index, params, buckets, args)
-    engine = index.serve(params, bucket_sizes=buckets)
+        return serve_async_clients(index, params, buckets, args, obs)
+    engine = index.serve(params, bucket_sizes=buckets, obs=obs)
     compile_s = engine.warmup(ds.base.shape[1])
     print(f"warmed {len(compile_s)} buckets "
           f"({', '.join(f'{b}:{s:.1f}s' for b, s in compile_s.items())})")
@@ -122,14 +132,26 @@ def main():
           f"(hits={m['cache_hits']:.0f} misses={m['cache_misses']:.0f}) "
           f"padded={m['padded_queries']:.0f}")
     assert m["recall_at_k"] >= args.recall_target, "recall target missed"
+    if obs is not None:
+        _dump_obs(obs, args.trace_out)
     print("OK")
 
 
-def serve_async_clients(index, params, buckets, args):
+def _dump_obs(obs, trace_out):
+    obs.write_trace(trace_out)
+    print(f"wrote {trace_out} ({obs.tracer.n_events} trace events) — "
+          f"open in ui.perfetto.dev")
+    prom = obs.registry.to_prometheus()
+    if prom.strip():
+        print("-- metrics registry (Prometheus text format) --")
+        print(prom, end="")
+
+
+def serve_async_clients(index, params, buckets, args, obs=None):
     """Single-query clients at Poisson arrivals through the coalescer."""
     srv = index.serve_async(params, max_wait_ms=args.max_wait_ms,
                             default_deadline_ms=args.deadline_ms,
-                            bucket_sizes=buckets)
+                            bucket_sizes=buckets, obs=obs)
     compile_s = srv.engine.warmup()
     print(f"warmed {len(compile_s)} buckets; offering ~{args.qps:g} qps "
           f"(deadline={args.deadline_ms} ms, "
@@ -181,6 +203,8 @@ def serve_async_clients(index, params, buckets, args):
             print(f"  bucket {b:3d}: {est[f'bucket{b}_chunks']:4.0f} chunks "
                   f"p50={est[f'bucket{b}_p50_ms']:.1f}ms "
                   f"p99={est[f'bucket{b}_p99_ms']:.1f}ms")
+    if obs is not None:
+        _dump_obs(obs, args.trace_out)
     print("OK")
 
 

@@ -489,7 +489,7 @@ class AnnIndex:
     # -- serving -----------------------------------------------------------
 
     def serve(self, params: SearchParams = SearchParams(), *, mesh=None,
-              **engine_kw):
+              obs=None, **engine_kw):
         """A bucketed, jit-cached :class:`repro.serve.AnnEngine` over this
         index (``engine_kw`` forwards e.g. ``bucket_sizes``).
 
@@ -497,15 +497,20 @@ class AnnIndex:
         speedann) and, with ``SearchParams(algorithm="sharded")``, the
         multi-device walker path — one Speed-ANN walker per device along
         ``mesh``'s ``model`` axis (``mesh=None``: the default
-        (1, n_devices) search mesh)."""
+        (1, n_devices) search mesh).
+
+        ``obs`` takes a :class:`repro.obs.Observability` bundle to enable
+        request-scoped tracing + convergence telemetry (None: the no-op
+        ``NULL_OBS`` — zero instrumentation cost).  See
+        docs/observability.md."""
         from repro.serve.ann_engine import AnnEngine
-        return AnnEngine(self, params, mesh=mesh, **engine_kw)
+        return AnnEngine(self, params, mesh=mesh, obs=obs, **engine_kw)
 
     def serve_async(self, params: SearchParams = SearchParams(), *,
                     max_batch: Optional[int] = None,
                     max_wait_ms: float = 2.0,
                     default_deadline_ms: Optional[float] = None,
-                    mesh=None, start: bool = True, **engine_kw):
+                    mesh=None, start: bool = True, obs=None, **engine_kw):
         """An async coalescing front-end (:class:`repro.serve.coalescer.
         AsyncAnnEngine`) over :meth:`serve`: single queries with
         per-request deadlines in, bucketed batches through the jit cache,
@@ -513,10 +518,11 @@ class AnnIndex:
 
         ``max_batch`` defaults to the engine's top bucket so a full flush
         exactly fills the biggest compiled executable.  The wrapped batched
-        engine stays reachable as ``.engine``.
+        engine stays reachable as ``.engine``.  One ``obs`` bundle covers
+        both layers: the coalescer inherits the engine's.
         """
         from repro.serve.coalescer import AsyncAnnEngine, CoalescePolicy
-        engine = self.serve(params, mesh=mesh, **engine_kw)
+        engine = self.serve(params, mesh=mesh, obs=obs, **engine_kw)
         policy = CoalescePolicy(
             max_batch=max_batch if max_batch is not None
             else engine.bucket_sizes[-1],

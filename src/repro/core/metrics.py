@@ -73,6 +73,23 @@ class SearchStats(NamedTuple):
                 for k, v in self._asdict().items()}
 
 
+# the fields the serving stack surfaces as per-lane DISTRIBUTIONS (registry
+# histograms, docs/observability.md): convergence depth, critical-path
+# rounds, and the total/unique/duplicate distance-computation split that
+# prices a batch-dedup backend
+TELEMETRY = ("steps", "crit_rounds", "dist_comps", "uniq_comps",
+             "batch_dup_comps")
+
+
+def telemetry_per_lane(stats: "SearchStats") -> dict:
+    """Host-side view of the TELEMETRY leaves: field -> (B,) float64 array
+    (scalar leaves become shape-(1,)).  One transfer per leaf — callers
+    gate on their metrics flag so the untraced hot path never pays it."""
+    return {field: np.asarray(getattr(stats, field),
+                              np.float64).reshape(-1)
+            for field in TELEMETRY}
+
+
 # sentinel for masked-out candidate slots in first-toucher counting; real
 # graph ids are always < n_nodes < 2**31 - 1
 _UNIQ_SENTINEL = jnp.int32(2**31 - 1)

@@ -1,0 +1,55 @@
+"""Opt-in bridge from host spans to the JAX device profiler.
+
+When a ``jax.profiler.trace()`` capture is running, host-side Python has
+no natural representation on the device timeline.  ``TraceAnnotation``
+fixes that: any code executed under one shows up as a named slice in the
+profiler's host rows, letting you line up "the coalescer dispatched bucket
+8 here" with the XLA ops it launched.
+
+:func:`device_annotation` is the single entry point.  It is a no-op
+(shared ``nullcontext``) unless explicitly enabled, so the serving hot
+path never touches the profiler machinery by default:
+
+    with device_annotation("ann_dispatch/bucket8", enabled=obs.profile):
+        out = compiled(queries)
+
+The import of ``jax.profiler`` is lazy and failure-tolerant — on a build
+without profiler support the annotation degrades to the null context
+instead of raising.
+"""
+from __future__ import annotations
+
+from contextlib import nullcontext
+
+__all__ = ["device_annotation", "have_profiler"]
+
+_TraceAnnotation = None
+_probed = False
+
+
+def _resolve():
+    global _TraceAnnotation, _probed
+    if not _probed:
+        _probed = True
+        try:
+            from jax.profiler import TraceAnnotation
+            _TraceAnnotation = TraceAnnotation
+        except Exception:
+            _TraceAnnotation = None
+    return _TraceAnnotation
+
+
+def have_profiler() -> bool:
+    """True if ``jax.profiler.TraceAnnotation`` is importable."""
+    return _resolve() is not None
+
+
+def device_annotation(name: str, enabled: bool = False):
+    """Context manager: ``jax.profiler.TraceAnnotation(name)`` when
+    ``enabled`` and the profiler is available, else a no-op."""
+    if not enabled:
+        return nullcontext()
+    cls = _resolve()
+    if cls is None:
+        return nullcontext()
+    return cls(name)

@@ -5,3 +5,4 @@ from repro.serve.coalescer import AsyncServeResult  # noqa: F401
 from repro.serve.coalescer import CoalescePolicy  # noqa: F401
 from repro.serve.coalescer import DeadlineExceeded  # noqa: F401
 from repro.serve.knnlm import KNNLMDatastore, knnlm_logits  # noqa: F401
+from repro.obs import Observability, NULL_OBS  # noqa: F401

@@ -55,7 +55,7 @@ Typical use::
 from __future__ import annotations
 
 import time
-from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,10 +67,17 @@ from repro.core.config import SearchConfig
 from repro.core.bfis import (DistFn, bfis_search_batch, hnsw_search_batch,
                              resolve_dist_fn, search_topm_batch)
 from repro.core.distributed import ShardedIndex, corpus_engine_searcher
-from repro.core.metrics import SearchStats, recall_at_k
+from repro.core.metrics import SearchStats, recall_at_k, telemetry_per_lane
 from repro.core.speedann import search_speedann_batch
+from repro.obs import NULL_OBS, LogHistogram, Observability, device_annotation
 
 DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+#: Relative error of every latency percentile the engine reports: latency
+#: samples land in a bounded log-bucketed sketch (``repro.obs.LogHistogram``)
+#: instead of an unbounded list, so ``p50/p90/p95/p99`` are exact to within
+#: ±1% while ``mean``/``max`` stay exact.  See docs/observability.md.
+LATENCY_REL_ERR = 0.01
 
 _ALGORITHMS = {
     "speedann": search_speedann_batch,
@@ -108,7 +115,9 @@ class AnnEngine:
         dist_fn: Optional[DistFn] = None,
         mesh=None,
         metric: Optional[str] = None,
+        obs: Optional[Observability] = None,
     ):
+        self.obs = obs if obs is not None else NULL_OBS
         self.index: Optional[AnnIndex] = None
         self.mesh = mesh
         self.mode = "single"
@@ -236,10 +245,17 @@ class AnnEngine:
         self.padded_queries = 0
         self.cache_hits = 0
         self.cache_misses = 0
-        self._latencies_ms: list[float] = []
+        # latency distributions live in bounded log-bucketed sketches (one
+        # global, one per bucket): constant memory under sustained traffic,
+        # mergeable across replicas, percentiles within LATENCY_REL_ERR
+        self._latency_hist = LogHistogram(rel_err=LATENCY_REL_ERR)
         # per-chunk latency keyed by the bucket it ran in — how the
         # coalescing policy's batch-size choices show up in the tail
-        self._bucket_latencies_ms: Dict[int, List[float]] = {}
+        self._bucket_hists: Dict[int, LogHistogram] = {}
+        # convergence-telemetry label: which distance kernel served this
+        # engine (per-backend registry histograms key on it)
+        self._backend_label = str(
+            getattr(self.cfg, "dist_backend", None) or "ref")
         self._recall_sum = 0.0
         self._recall_n = 0
         # traversal work totals over served (non-padding) lanes; the
@@ -328,7 +344,7 @@ class AnnEngine:
             jax.block_until_ready(self._compiled(b)(q)[0])
             out[b] = time.perf_counter() - t0
         self.cache_hits, self.cache_misses = hits, misses
-        self._bucket_latencies_ms = {}
+        self._bucket_hists = {}
         return out
 
     # -- serving -----------------------------------------------------------
@@ -353,12 +369,25 @@ class AnnEngine:
                 [queries, jnp.broadcast_to(queries[:1],
                                            (pad, queries.shape[1]))])
             self.padded_queries += pad
-        t0 = time.perf_counter()
-        ids, dists, stats = self._compiled(bucket)(queries)
-        if record:
-            jax.block_until_ready(ids)
-            self._bucket_latencies_ms.setdefault(bucket, []).append(
-                (time.perf_counter() - t0) * 1e3)
+        obs = self.obs
+        rerank_k = self.params.rerank_k if self.params is not None else 0
+        # the rerank pass (params.rerank_k > 0) runs INSIDE this compiled
+        # program, so it is part of the device_compute span, not a separate
+        # host span — the span args record it for the trace reader
+        with obs.tracer.span("device_compute", cat="engine",
+                             args={"bucket": bucket, "pad": pad,
+                                   "rerank_k": rerank_k}):
+            with device_annotation(
+                    f"ann_dispatch/bucket{bucket}", enabled=obs.profile):
+                t0 = time.perf_counter()
+                ids, dists, stats = self._compiled(bucket)(queries)
+                if record:
+                    jax.block_until_ready(ids)
+                    hist = self._bucket_hists.get(bucket)
+                    if hist is None:
+                        hist = self._bucket_hists.setdefault(
+                            bucket, LogHistogram(rel_err=LATENCY_REL_ERR))
+                    hist.observe((time.perf_counter() - t0) * 1e3)
         out = (ids[:b], dists[:b],
                jax.tree.map(lambda t: t[:b], stats))
         return out, bucket
@@ -376,52 +405,83 @@ class AnnEngine:
                 f"queries must be (B, d) with B >= 1, got {queries.shape}")
         bsz = queries.shape[0]
         top = self.bucket_sizes[-1]
+        obs = self.obs
 
-        t0 = time.perf_counter()
-        chunks, buckets = [], []
-        single_chunk = bsz <= top
-        for lo in range(0, bsz, top):
-            out, bucket = self._run_chunk(queries[lo:lo + top],
-                                          record=single_chunk)
-            chunks.append(out)
-            buckets.append(bucket)
-        if not single_chunk:
-            jax.block_until_ready(chunks[-1][0])
-        ms = (time.perf_counter() - t0) * 1e3
+        with obs.tracer.span("engine.search", cat="engine",
+                             args={"batch": bsz}) as sp:
+            t0 = time.perf_counter()
+            chunks, buckets = [], []
+            single_chunk = bsz <= top
+            for lo in range(0, bsz, top):
+                out, bucket = self._run_chunk(queries[lo:lo + top],
+                                              record=single_chunk)
+                chunks.append(out)
+                buckets.append(bucket)
+            if not single_chunk:
+                jax.block_until_ready(chunks[-1][0])
+            ms = (time.perf_counter() - t0) * 1e3
+            sp.add_args(buckets=list(buckets), latency_ms=round(ms, 3))
 
-        if len(chunks) == 1:
-            ids, dists, stats = chunks[0]
-        else:
-            ids = jnp.concatenate([c[0] for c in chunks])
-            dists = jnp.concatenate([c[1] for c in chunks])
-            stats = jax.tree.map(
-                lambda *xs: jnp.concatenate(xs), *[c[2] for c in chunks])
+            with obs.tracer.span("postprocess", cat="engine"):
+                if len(chunks) == 1:
+                    ids, dists, stats = chunks[0]
+                else:
+                    ids = jnp.concatenate([c[0] for c in chunks])
+                    dists = jnp.concatenate([c[1] for c in chunks])
+                    stats = jax.tree.map(
+                        lambda *xs: jnp.concatenate(xs), *[c[2] for c in chunks])
 
-        self.queries_served += bsz
-        self.requests_served += 1
-        self._latencies_ms.append(ms)
-        self.dist_comps_total += int(np.sum(np.asarray(stats.dist_comps)))
-        self.uniq_comps_total += int(np.sum(np.asarray(stats.uniq_comps)))
-        self.batch_dup_comps_total += int(
-            np.sum(np.asarray(stats.batch_dup_comps)))
-        ids_np = np.asarray(ids)
-        if gt_ids is not None:
-            self._recall_sum += recall_at_k(ids_np, gt_ids, self.cfg.k) * bsz
-            self._recall_n += bsz
+                self.queries_served += bsz
+                self.requests_served += 1
+                self._latency_hist.observe(ms)
+                self.dist_comps_total += int(
+                    np.sum(np.asarray(stats.dist_comps)))
+                self.uniq_comps_total += int(
+                    np.sum(np.asarray(stats.uniq_comps)))
+                self.batch_dup_comps_total += int(
+                    np.sum(np.asarray(stats.batch_dup_comps)))
+                if obs.metrics:
+                    self._record_telemetry(stats, buckets, ms)
+                ids_np = np.asarray(ids)
+                if gt_ids is not None:
+                    self._recall_sum += (
+                        recall_at_k(ids_np, gt_ids, self.cfg.k) * bsz)
+                    self._recall_n += bsz
         return ServeResult(ids_np, np.asarray(dists), stats, ms,
                            tuple(buckets))
 
     # -- observability -----------------------------------------------------
 
+    def _record_telemetry(self, stats: SearchStats, buckets: Sequence[int],
+                          request_ms: float) -> None:
+        """Convergence telemetry: per-lane ``SearchStats`` leaves into
+        registry histograms, labelled ``{backend, bucket}`` — the
+        distribution view (steps-to-converge, dup ratios) that totals
+        cannot give.  Only called when ``obs.metrics`` is on."""
+        reg = self.obs.registry
+        bucket = str(buckets[0]) if len(buckets) == 1 else "chunked"
+        for field, values in telemetry_per_lane(stats).items():
+            child = reg.histogram(
+                f"ann_{field}",
+                f"per-lane SearchStats.{field} over served queries",
+            ).labels(backend=self._backend_label, bucket=bucket)
+            for v in values:
+                child.observe(v)
+        reg.histogram(
+            "serve_request_latency_ms",
+            "engine wall-clock per request (all chunks)",
+        ).labels(backend=self._backend_label).observe(request_ms)
+
     @staticmethod
-    def _percentiles(lat: np.ndarray, prefix: str) -> Dict[str, float]:
+    def _hist_summary(h: LogHistogram, prefix: str) -> Dict[str, float]:
+        """mean/max exact; p50/p90/p95/p99 within ``LATENCY_REL_ERR``."""
         return {
-            f"{prefix}mean_ms": float(lat.mean()),
-            f"{prefix}p50_ms": float(np.percentile(lat, 50)),
-            f"{prefix}p90_ms": float(np.percentile(lat, 90)),
-            f"{prefix}p95_ms": float(np.percentile(lat, 95)),
-            f"{prefix}p99_ms": float(np.percentile(lat, 99)),
-            f"{prefix}max_ms": float(lat.max()),
+            f"{prefix}mean_ms": h.mean,
+            f"{prefix}p50_ms": h.quantile(0.50),
+            f"{prefix}p90_ms": h.quantile(0.90),
+            f"{prefix}p95_ms": h.quantile(0.95),
+            f"{prefix}p99_ms": h.quantile(0.99),
+            f"{prefix}max_ms": h.max,
         }
 
     def stats(self) -> Dict[str, float]:
@@ -430,9 +490,18 @@ class AnnEngine:
         request AND per bucket size (``bucket{b}_*`` keys), so the effect
         of batch coalescing on the tail is visible from the stats alone.
         Per-bucket rows cover single-chunk requests only (oversize chunked
-        requests stay pipelined, see ``_run_chunk``).  Schema documented in
-        docs/serving.md."""
-        lat = np.asarray(self._latencies_ms, np.float64)
+        requests stay pipelined, see ``_run_chunk``).
+
+        Memory is bounded: latency samples land in log-bucketed sketches,
+        so percentile keys are bucket-resolved (exact within
+        ``LATENCY_REL_ERR`` = ±1%) while ``*_mean_ms``/``*_max_ms`` and
+        every counter stay exact.
+
+        Key order is stable and documented (docs/serving.md): global
+        counters in the order below, then the global ``latency_*`` block,
+        then per-bucket blocks in ascending bucket size
+        (``bucket{b}_chunks`` first within each block), then
+        ``recall_at_k`` last when ground truth was supplied."""
         out = {
             "queries_served": float(self.queries_served),
             "requests_served": float(self.requests_served),
@@ -449,12 +518,12 @@ class AnnEngine:
                 self.batch_dup_comps_total / self.dist_comps_total
                 if self.dist_comps_total else 0.0),
         }
-        if lat.size:
-            out.update(self._percentiles(lat, "latency_"))
-        for b in sorted(self._bucket_latencies_ms):
-            bl = np.asarray(self._bucket_latencies_ms[b], np.float64)
-            out[f"bucket{b}_chunks"] = float(bl.size)
-            out.update(self._percentiles(bl, f"bucket{b}_"))
+        if self._latency_hist.count:
+            out.update(self._hist_summary(self._latency_hist, "latency_"))
+        for b in sorted(self._bucket_hists):
+            bh = self._bucket_hists[b]
+            out[f"bucket{b}_chunks"] = float(bh.count)
+            out.update(self._hist_summary(bh, f"bucket{b}_"))
         if self._recall_n:
             out["recall_at_k"] = self._recall_sum / self._recall_n
         return out
@@ -462,3 +531,12 @@ class AnnEngine:
     def metrics(self) -> Dict[str, float]:
         """Back-compat alias of :meth:`stats`."""
         return self.stats()
+
+    def latency_histograms(self) -> Dict[str, LogHistogram]:
+        """The live sketches behind :meth:`stats` — ``"request"`` plus one
+        ``"bucket{b}"`` per served bucket.  Merge across replicas with
+        ``LogHistogram.merge`` for fleet-wide percentiles."""
+        out: Dict[str, LogHistogram] = {"request": self._latency_hist}
+        for b in sorted(self._bucket_hists):
+            out[f"bucket{b}"] = self._bucket_hists[b]
+        return out

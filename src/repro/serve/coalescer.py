@@ -49,6 +49,8 @@ from typing import Dict, List, NamedTuple, Optional
 
 import numpy as np
 
+from repro.obs import NULL_OBS, LogHistogram, Observability
+
 __all__ = ["CoalescePolicy", "DeadlineExceeded", "AsyncServeResult",
            "AsyncAnnEngine"]
 
@@ -138,25 +140,30 @@ class AsyncAnnEngine:
     """
 
     def __init__(self, engine, policy: CoalescePolicy = CoalescePolicy(), *,
-                 start: bool = True):
+                 start: bool = True, obs: Optional[Observability] = None):
         if policy.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if policy.max_wait_ms < 0:
             raise ValueError("max_wait_ms must be >= 0")
         self.engine = engine
         self.policy = policy
+        # the tracing/metrics bundle: explicit obs wins, else inherit the
+        # engine's so one handle covers the whole serving stack
+        self.obs = obs if obs is not None \
+            else getattr(engine, "obs", None) or NULL_OBS
         self._pending: List[_Pending] = []
         self._lock = threading.Condition()
         self._seq = itertools.count()
         self._closed = False
-        # observability
+        # observability — distributions live in bounded log-bucketed
+        # sketches (constant memory under sustained traffic, mergeable)
         self.submitted = 0
         self.served = 0
         self.rejected_deadline = 0
         self.cancelled = 0
         self.batches_dispatched = 0
-        self._batch_sizes: List[int] = []
-        self._queue_waits_ms: List[float] = []
+        self._batch_size_hist = LogHistogram()
+        self._queue_wait_hist = LogHistogram()
         self._thread: Optional[threading.Thread] = None
         if start:
             self._thread = threading.Thread(
@@ -196,6 +203,12 @@ class AsyncAnnEngine:
             self._pending.append(item)
             self.submitted += 1
             self._lock.notify_all()
+        # async ("b"/"e") request lifeline: enqueue here on the client
+        # thread, closed on the dispatcher thread at resolve time — the
+        # cross-thread view Perfetto draws above the per-thread span stacks
+        self.obs.tracer.async_begin(
+            "request", item.seq, cat="request",
+            args={"deadline_ms": deadline_ms})
         return fut
 
     # -- dispatch ------------------------------------------------------------
@@ -204,6 +217,7 @@ class AsyncAnnEngine:
         return now - min(p.enqueue_t for p in self._pending)
 
     def _dispatch_loop(self):
+        self.obs.tracer.name_thread("coalescer-dispatch")
         max_wait_s = self.policy.max_wait_ms / 1e3
         while True:
             with self._lock:
@@ -233,58 +247,115 @@ class AsyncAnnEngine:
             n += served
 
     def _flush_once(self) -> int:
+        tracer = self.obs.tracer
         with self._lock:
             if not self._pending:
                 return 0
-            now = time.perf_counter()
-            batch, expired, rest = select_batch(
-                self._pending, now, self.policy.max_batch)
-            self._pending = rest
         resolved = 0
-        # set_running_or_notify_cancel guards every resolution: a future the
-        # CLIENT cancelled while it was queued must be dropped, not written
-        # to — set_result on a cancelled future raises InvalidStateError,
-        # which would kill the dispatcher thread and hang every later caller
-        for p in expired:
-            resolved += 1
-            if p.future.set_running_or_notify_cancel():
-                with self._lock:
-                    self.rejected_deadline += 1
-                p.future.set_exception(DeadlineExceeded(
-                    f"deadline expired {1e3 * (now - p.deadline_t):.2f} ms "
-                    "before dispatch"))
-            else:
-                with self._lock:
-                    self.cancelled += 1
-        live = []
-        for p in batch:
-            if p.future.set_running_or_notify_cancel():
-                live.append(p)       # now RUNNING: cancel() can no longer win
-            else:
+        n_shed = n_cancelled = 0
+        live: List[_Pending] = []
+        with tracer.span("batch_formation", cat="coalescer") as sp:
+            with self._lock:
+                if not self._pending:
+                    return 0   # drained by a concurrent flush
+                now = time.perf_counter()
+                n_pending = len(self._pending)
+                batch, expired, rest = select_batch(
+                    self._pending, now, self.policy.max_batch)
+                self._pending = rest
+            # the EDF decision, as the trace records it: who was picked, in
+            # what order, who was shed, who stays queued
+            sp.add_args(pending=n_pending, batch=len(batch),
+                        shed=len(expired), deferred=len(rest),
+                        edf_order=[p.seq for p in batch])
+            # set_running_or_notify_cancel guards every resolution: a future
+            # the CLIENT cancelled while it was queued must be dropped, not
+            # written to — set_result on a cancelled future raises
+            # InvalidStateError, which would kill the dispatcher thread and
+            # hang every later caller
+            for p in expired:
                 resolved += 1
-                with self._lock:
-                    self.cancelled += 1
+                if p.future.set_running_or_notify_cancel():
+                    with self._lock:
+                        self.rejected_deadline += 1
+                    n_shed += 1
+                    late_ms = 1e3 * (now - p.deadline_t)
+                    sp.event("deadline_shed",
+                             {"req": p.seq, "late_ms": round(late_ms, 3)})
+                    tracer.async_end("request", p.seq,
+                                     args={"outcome": "shed"})
+                    p.future.set_exception(DeadlineExceeded(
+                        f"deadline expired {late_ms:.2f} ms before dispatch"))
+                else:
+                    with self._lock:
+                        self.cancelled += 1
+                    n_cancelled += 1
+                    tracer.async_end("request", p.seq,
+                                     args={"outcome": "cancelled"})
+            for p in batch:
+                if p.future.set_running_or_notify_cancel():
+                    live.append(p)   # now RUNNING: cancel() can no longer win
+                else:
+                    resolved += 1
+                    with self._lock:
+                        self.cancelled += 1
+                    n_cancelled += 1
+                    tracer.async_end("request", p.seq,
+                                     args={"outcome": "cancelled"})
+        if self.obs.metrics and (n_shed or n_cancelled):
+            out = self.obs.registry.counter(
+                "coalescer_requests_total", "requests by final outcome")
+            if n_shed:
+                out.inc(n_shed, outcome="shed")
+            if n_cancelled:
+                out.inc(n_cancelled, outcome="cancelled")
         if not live:
             return resolved
         queries = np.stack([p.query for p in live])
-        try:
-            res = self.engine.search(queries)
-        except Exception as e:  # noqa: BLE001 - failure goes to the callers
-            for p in live:
-                p.future.set_exception(e)
-            return resolved + len(live)
+        # engine.search runs inside this span on the same thread, so its
+        # engine.search/device_compute spans nest under dispatch by
+        # containment
+        with tracer.span("dispatch", cat="coalescer",
+                         args={"batch": len(live)}):
+            try:
+                res = self.engine.search(queries)
+            except Exception as e:  # noqa: BLE001 - failure goes to callers
+                for p in live:
+                    tracer.async_end("request", p.seq,
+                                     args={"outcome": "error"})
+                    p.future.set_exception(e)
+                return resolved + len(live)
         done_t = time.perf_counter()
-        with self._lock:
-            self.batches_dispatched += 1
-            self._batch_sizes.append(len(live))
-            self.served += len(live)
-            waits = [(now - p.enqueue_t) * 1e3 for p in live]
-            self._queue_waits_ms.extend(waits)
-        for i, p in enumerate(live):
-            p.future.set_result(AsyncServeResult(
-                ids=res.ids[i], dists=res.dists[i],
-                queue_wait_ms=waits[i], batch_size=float(len(live)),
-                latency_ms=res.latency_ms, done_t=done_t))
+        with tracer.span("resolve", cat="coalescer",
+                         args={"batch": len(live)}):
+            with self._lock:
+                self.batches_dispatched += 1
+                self._batch_size_hist.observe(len(live))
+                self.served += len(live)
+                waits = [(now - p.enqueue_t) * 1e3 for p in live]
+                for w in waits:
+                    self._queue_wait_hist.observe(w)
+            if self.obs.metrics:
+                reg = self.obs.registry
+                reg.counter("coalescer_requests_total",
+                            "requests by final outcome"
+                            ).inc(len(live), outcome="served")
+                qw = reg.histogram("coalescer_queue_wait_ms",
+                                   "queue time before dispatch")
+                for w in waits:
+                    qw.observe(w)
+                reg.histogram("coalescer_batch_size",
+                              "true size of dispatched batches"
+                              ).observe(len(live))
+            for i, p in enumerate(live):
+                p.future.set_result(AsyncServeResult(
+                    ids=res.ids[i], dists=res.dists[i],
+                    queue_wait_ms=waits[i], batch_size=float(len(live)),
+                    latency_ms=res.latency_ms, done_t=done_t))
+                tracer.async_end(
+                    "request", p.seq,
+                    args={"outcome": "served",
+                          "queue_wait_ms": round(waits[i], 3)})
         return resolved + len(live)
 
     # -- lifecycle -----------------------------------------------------------
@@ -317,10 +388,13 @@ class AsyncAnnEngine:
     def stats(self) -> Dict[str, float]:
         """Coalescing-level counters + queue-wait distribution.  The wrapped
         engine's own ``stats()`` (per-bucket latency percentiles, jit-cache
-        counters) stays separate under ``self.engine.stats()``."""
+        counters) stays separate under ``self.engine.stats()``.
+
+        Distributions come from bounded log-bucketed sketches
+        (``repro.obs.LogHistogram``): memory is constant under sustained
+        traffic; ``*_mean``/``*_max`` are exact, percentile keys are
+        bucket-resolved within ±1% (see docs/observability.md)."""
         with self._lock:
-            sizes = np.asarray(self._batch_sizes, np.float64)
-            waits = np.asarray(self._queue_waits_ms, np.float64)
             out = {
                 "submitted": float(self.submitted),
                 "served": float(self.served),
@@ -329,14 +403,15 @@ class AsyncAnnEngine:
                 "pending": float(len(self._pending)),
                 "batches_dispatched": float(self.batches_dispatched),
             }
-        if sizes.size:
-            out.update(batch_size_mean=float(sizes.mean()),
-                       batch_size_max=float(sizes.max()))
-        if waits.size:
+        if self._batch_size_hist.count:
+            out.update(batch_size_mean=self._batch_size_hist.mean,
+                       batch_size_max=self._batch_size_hist.max)
+        qw = self._queue_wait_hist
+        if qw.count:
             out.update(
-                queue_wait_mean_ms=float(waits.mean()),
-                queue_wait_p50_ms=float(np.percentile(waits, 50)),
-                queue_wait_p95_ms=float(np.percentile(waits, 95)),
-                queue_wait_p99_ms=float(np.percentile(waits, 99)),
+                queue_wait_mean_ms=qw.mean,
+                queue_wait_p50_ms=qw.quantile(0.50),
+                queue_wait_p95_ms=qw.quantile(0.95),
+                queue_wait_p99_ms=qw.quantile(0.99),
             )
         return out

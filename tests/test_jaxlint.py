@@ -417,6 +417,146 @@ def test_jl402_flatten_in_core_batch_function(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# JL5 — observability boundary
+# ---------------------------------------------------------------------------
+
+def test_jl501_io_callback_in_jit(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+        from jax.experimental import io_callback
+
+        @jax.jit
+        def step(x):
+            io_callback(print, None, x)
+            return x + 1
+    """}, select=["JL5"])
+    (f,) = only(findings, "JL501")
+    assert (f.path, f.line) == ("src/fx/mod.py", 6)
+    assert not f.suppressed
+
+
+def test_jl501_debug_callback_dotted_and_from_import(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+        from jax import debug
+
+        @jax.jit
+        def a(x):
+            jax.debug.callback(print, x)
+            return x
+
+        @jax.jit
+        def b(x):
+            debug.callback(print, x)
+            return x
+    """}, select=["JL5"])
+    hits = only(findings, "JL501")
+    assert [f.line for f in hits] == [6, 11]
+
+
+def test_jl501_reaches_traced_helpers_not_host_code(tmp_path):
+    # the callback sits in a helper the jit root calls — still traced;
+    # the identical call in an untraced function is not JL5's business
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+        from jax.experimental import io_callback
+
+        def helper(x):
+            io_callback(print, None, x)
+            return x
+
+        @jax.jit
+        def root(x):
+            return helper(x)
+
+        def host_driver(x):
+            io_callback(print, None, x)
+            return x
+    """}, select=["JL5"])
+    (f,) = only(findings, "JL501")
+    assert f.line == 5
+
+
+def test_jl502_host_clock_in_jit(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import time
+        from time import perf_counter
+        import jax
+
+        @jax.jit
+        def f(x):
+            t0 = time.perf_counter()
+            t1 = perf_counter()
+            return x + (t1 - t0)
+    """}, select=["JL5"])
+    hits = only(findings, "JL502")
+    assert [f.line for f in hits] == [7, 8]
+    assert "trace time" in hits[0].message
+
+
+def test_jl502_datetime_now_in_jit(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import datetime
+        import jax
+
+        @jax.jit
+        def f(x):
+            stamp = datetime.datetime.now()
+            return x
+    """}, select=["JL5"])
+    (f,) = only(findings, "JL502")
+    assert f.line == 6
+
+
+def test_jl5_obs_modules_are_exempt(tmp_path):
+    src = """\
+        import time
+        import jax
+
+        @jax.jit
+        def f(x):
+            t0 = time.perf_counter()
+            return x + t0
+    """
+    assert sweep(tmp_path, {"fx/obs/bridge.py": src}, select=["JL5"]) == []
+    # same code outside the obs package fires
+    hits = sweep(tmp_path / "b", {"fx/serve/mod.py": src}, select=["JL5"])
+    assert only(hits, "JL502")
+
+
+def test_jl5_untraced_timing_is_fine(tmp_path):
+    # host-side timing around a dispatch is exactly what the engine does
+    assert sweep(tmp_path, {"fx/mod.py": """\
+        import time
+        import jax
+
+        @jax.jit
+        def compute(x):
+            return x * 2
+
+        def timed_dispatch(x):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(compute(x))
+            return out, time.perf_counter() - t0
+    """}, select=["JL5"]) == []
+
+
+def test_jl5_suppression(tmp_path):
+    findings = sweep(tmp_path, {"fx/mod.py": """\
+        import jax
+        from jax.experimental import io_callback
+
+        @jax.jit
+        def f(x):
+            io_callback(print, None, x)  # jaxlint: ignore[JL501] -- debug tap
+            return x
+    """}, select=["JL5"])
+    (f,) = only(findings, "JL501")
+    assert f.suppressed
+    assert f.justification == "debug tap"
+
+
+# ---------------------------------------------------------------------------
 # suppressions
 # ---------------------------------------------------------------------------
 

@@ -25,7 +25,7 @@ def build_parser() -> argparse.ArgumentParser:
         prog="python -m tools.jaxlint",
         description="repo-specific static analysis: tracer purity (JL1), "
                     "backend contracts (JL2), recompile hygiene (JL3), "
-                    "shape conventions (JL4)")
+                    "shape conventions (JL4), observability boundary (JL5)")
     p.add_argument("paths", nargs="*", default=["src/repro"],
                    help="files/directories to sweep (default: src/repro)")
     p.add_argument("--select", default=None,

@@ -1,7 +1,7 @@
 """Finding/rule data model and the pluggable rule registry.
 
 A *rule* is a callable ``check(project) -> Iterable[Finding]`` registered
-under a family id (``JL1`` .. ``JL4``).  The CLI selects families (or full
+under a family id (``JL1`` .. ``JL5``).  The CLI selects families (or full
 rule ids) with ``--select`` and renders the findings; per-line
 ``# jaxlint: ignore[...]`` comments mark findings as suppressed (they are
 still reported with ``--show-suppressed`` but never fail the run).
@@ -27,9 +27,13 @@ RULE_DESCRIPTIONS: Dict[str, str] = {
     "JL303": "jax.jit created inside a loop (retraces every iteration)",
     "JL401": "batch-major function missing leading-B axis documentation",
     "JL402": "full flatten (.reshape(-1)) inside a batch-major core function",
+    "JL501": "host callback (io_callback/pure_callback/debug.callback) "
+             "inside traced code outside the repro.obs boundary",
+    "JL502": "host wall-clock read (time.*/datetime.now) inside traced code "
+             "outside the repro.obs boundary",
 }
 
-FAMILIES = ("JL1", "JL2", "JL3", "JL4")
+FAMILIES = ("JL1", "JL2", "JL3", "JL4", "JL5")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,7 +97,7 @@ def register_rule(family: str, name: str, doc: str = ""):
 
 def all_rules() -> List[Rule]:
     # import for the registration side effect; rule modules register on load
-    from tools.jaxlint.rules import jl1, jl2, jl3, jl4  # noqa: F401
+    from tools.jaxlint.rules import jl1, jl2, jl3, jl4, jl5  # noqa: F401
     return [_RULES[f] for f in sorted(_RULES)]
 
 

@@ -1,0 +1,184 @@
+"""JL5 — observability boundary.
+
+PR 8 added ``repro.obs``: request tracing, metrics, and the
+``jax.profiler`` bridge.  Instrumentation belongs on the HOST side of a
+dispatch (the engine/coalescer layer); smuggling it *into* traced code is
+the classic way a latency fix becomes a latency regression:
+
+* **JL501** — ``io_callback`` / ``pure_callback`` / ``jax.debug.callback``
+  inside a traced (jitted) function.  A callback inserts a host round-trip
+  into the compiled program: it serializes the device stream, defeats
+  fusion around the call site, and (for ``io_callback``) imposes ordering
+  constraints the scheduler must honor on every execution — per step, not
+  per request.
+* **JL502** — host wall-clock reads (``time.time`` / ``perf_counter`` /
+  ``monotonic`` / ``process_time`` and friends, ``datetime.now``) inside a
+  traced function.  Under jit these run ONCE, at trace time: the "timing"
+  becomes a baked-in constant that measures tracing, not execution — the
+  numbers look plausible and are pure fiction.  Time around the dispatch
+  with ``block_until_ready`` (as the engine does), or use
+  ``jax.profiler`` for on-device timelines.
+
+The *traced set* comes from the same call-graph fixpoint as JL1 (jit
+decorations/calls, lax control-flow bodies, pallas_call kernels,
+vmap/pmap/shard_map/grad targets, registered backends).  Modules with an
+``obs`` package component (``repro.obs.*``) are exempt — they are the
+sanctioned boundary where host instrumentation lives; everything they
+export to traced code (e.g. the profiler bridge) is host-side by
+construction.  Use the standard suppression syntax for a deliberate
+exception elsewhere.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from tools.jaxlint.model import Finding, register_rule
+from tools.jaxlint.project import Module, Project, dotted_name
+from tools.jaxlint.traced import TracedAnalysis
+
+# host-callback primitives (leaf name -> the jax module family they live in)
+_CALLBACK_LEAVES = {"io_callback", "pure_callback"}
+# time-module functions that read a host clock
+_TIME_FNS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns", "process_time", "process_time_ns",
+             "thread_time", "thread_time_ns"}
+_DATETIME_FNS = {"now", "utcnow", "today"}
+
+
+def _finding(project: Project, mod: Module, node: ast.AST, rule: str,
+             message: str) -> Finding:
+    line = getattr(node, "lineno", 1)
+    sup = project.suppression_for(mod, line, rule)
+    return Finding(rule=rule, path=mod.relpath, line=line,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   suppressed=sup is not None,
+                   justification=sup.justification if sup else "")
+
+
+def _in_obs_boundary(mod: Module) -> bool:
+    """True for modules inside an ``obs`` package (``repro.obs.*``) — the
+    sanctioned host-instrumentation layer."""
+    return "obs" in mod.modname.split(".")
+
+
+def _resolves_to_module(mod: Module, root: str, target: str) -> bool:
+    """Name ``root`` refers to module ``target`` here (direct import,
+    aliased import, or ``from x import target``)."""
+    if root == target:
+        return True
+    if mod.import_aliases.get(root) == target:
+        return True
+    entry = mod.import_names.get(root)
+    return entry is not None and (entry[0] == target
+                                  or f"{entry[0]}.{entry[1]}" == target)
+
+
+def _callback_offense(mod: Module, call: ast.Call) -> Optional[str]:
+    """The offending callable's display name if ``call`` is a host
+    callback, else None."""
+    fname = dotted_name(call.func)
+    if not fname:
+        return None
+    parts = fname.split(".")
+    leaf = parts[-1]
+    if leaf in _CALLBACK_LEAVES:
+        if len(parts) == 1:
+            # bare name: honour it only when imported from a jax module
+            entry = mod.import_names.get(leaf)
+            if entry is not None and entry[0].split(".")[0] == "jax" \
+                    and entry[1] in _CALLBACK_LEAVES:
+                return f"jax {leaf}"
+            return None
+        root = parts[0]
+        if root == "jax" or mod.import_aliases.get(root, "").startswith(
+                "jax") or _resolves_to_module(mod, root, "jax.experimental"):
+            return fname
+        return None
+    if leaf == "callback" and len(parts) >= 2 and parts[-2] == "debug":
+        # jax.debug.callback / `from jax import debug; debug.callback(...)`
+        root = parts[0]
+        if root == "jax" or _resolves_to_module(mod, root, "jax.debug") \
+                or mod.import_names.get(root) == ("jax", "debug"):
+            return fname
+    return None
+
+
+def _timing_offense(mod: Module, call: ast.Call) -> Optional[str]:
+    """The offending clock call's display name, else None."""
+    fname = dotted_name(call.func)
+    if not fname:
+        return None
+    parts = fname.split(".")
+    leaf = parts[-1]
+    if len(parts) == 1:
+        # `from time import perf_counter` (possibly aliased)
+        entry = mod.import_names.get(leaf)
+        if entry is not None and entry[0] == "time" \
+                and entry[1] in _TIME_FNS:
+            return f"time.{entry[1]}"
+        return None
+    if leaf in _TIME_FNS and _resolves_to_module(mod, parts[0], "time"):
+        return fname
+    if leaf in _DATETIME_FNS:
+        # datetime.now() / datetime.datetime.now() / dt.datetime.utcnow()
+        root = parts[0]
+        if root == "datetime" or mod.import_aliases.get(root) == "datetime" \
+                or mod.import_names.get(root, ("", ""))[0] == "datetime":
+            return fname
+    return None
+
+
+def _own_calls(node: ast.AST) -> List[ast.Call]:
+    """Call nodes in ``node``'s own body, nested defs/lambdas excluded
+    (traced nested defs are their own entries in the traced set)."""
+    out: List[ast.Call] = []
+    body = getattr(node, "body", [])
+    stack: List[ast.AST] = list(body) if isinstance(body, list) else [body]
+    while stack:
+        cur = stack.pop()
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            continue
+        if isinstance(cur, ast.Call):
+            out.append(cur)
+        stack.extend(ast.iter_child_nodes(cur))
+    return out
+
+
+@register_rule("JL5", "obs-boundary",
+               "host callbacks and wall-clock reads inside traced code "
+               "outside the repro.obs instrumentation boundary")
+def check_jl5(project: Project):
+    analysis = TracedAnalysis(project)
+    analysis.run()
+    findings: List[Finding] = []
+    seen: set[Tuple] = set()
+    for fn, _params, _inherited in analysis.state.values():
+        mod = fn.module
+        if _in_obs_boundary(mod):
+            continue
+        for call in _own_calls(fn.node):
+            cb = _callback_offense(mod, call)
+            if cb is not None:
+                key = ("JL501", mod.relpath, call.lineno, call.col_offset)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(_finding(
+                        project, mod, call, "JL501",
+                        f"host callback `{cb}` inside traced "
+                        f"'{fn.name}' — a device-to-host round trip on "
+                        f"every execution; instrument at the dispatch "
+                        f"layer (repro.obs) instead"))
+            tm = _timing_offense(mod, call)
+            if tm is not None:
+                key = ("JL502", mod.relpath, call.lineno, call.col_offset)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(_finding(
+                        project, mod, call, "JL502",
+                        f"host clock `{tm}` inside traced '{fn.name}' — "
+                        f"runs once at trace time and bakes in a "
+                        f"constant; time around the dispatch with "
+                        f"block_until_ready (see repro.obs)"))
+    return findings
