@@ -21,7 +21,16 @@ synchronization, bounded budgets) runs with the distance backend picked by
         [--max-batch 32] [--dist-backend ref|rowgather|dma|ref_int8|...] \
         [--metric l2|ip|cosine] [--quant none|int8|bf16] [--rerank-k 30] \
         [--async-client --qps 50 --deadline-ms 200] [--sharded] \
+        [--cache] [--priority-mix 0.5 --admission 4,16] [--replicas 2] \
         [--trace-out trace.json]
+
+The serving-tier flags (all ``--async-client``): ``--cache`` puts the
+quantized-code result cache in front of the queue (clients draw from a
+finite query pool, so repeats replay for free); ``--priority-mix F`` sends
+an F fraction of requests latency-critical and the rest throughput-class,
+with ``--admission TW,CW`` shedding throughput-class first at those queue
+depths; ``--replicas N`` routes dispatch over N data-parallel engine
+replicas with latency-aware replica selection.
 
 ``--quant int8 --dist-backend ref_int8 --rerank-k 30`` serves the two-stage
 quantized configuration: int8 traversal, exact f32 re-ranking — the engine
@@ -72,6 +81,18 @@ def main():
                          "(default: none)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="coalescer max-wait flush for --async-client")
+    ap.add_argument("--cache", action="store_true",
+                    help="with --async-client: quantized-code result cache "
+                         "in front of the coalescing queue")
+    ap.add_argument("--priority-mix", type=float, default=1.0,
+                    help="with --async-client: fraction of requests in the "
+                         "critical class (rest throughput-class)")
+    ap.add_argument("--admission", default=None, metavar="TW,CW",
+                    help="with --async-client: admission watermarks "
+                         "(throughput,critical queue depths, e.g. 4,16)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --async-client: route over N data-parallel "
+                         "engine replicas")
     ap.add_argument("--trace-out", default=None,
                     help="record request-scoped spans and write "
                          "Chrome-trace/Perfetto JSON here (open in "
@@ -148,27 +169,58 @@ def _dump_obs(obs, trace_out):
 
 
 def serve_async_clients(index, params, buckets, args, obs=None):
-    """Single-query clients at Poisson arrivals through the coalescer."""
-    srv = index.serve_async(params, max_wait_ms=args.max_wait_ms,
-                            default_deadline_ms=args.deadline_ms,
-                            bucket_sizes=buckets, obs=obs)
-    compile_s = srv.engine.warmup()
-    print(f"warmed {len(compile_s)} buckets; offering ~{args.qps:g} qps "
+    """Single-query clients at Poisson arrivals through the coalescer,
+    optionally behind the serving tier (cache / admission / replicas)."""
+    from repro.serve import (AdmissionPolicy, AsyncAnnEngine, CachePolicy,
+                             CoalescePolicy, ReplicaRouter, RouterPolicy)
+    cache = CachePolicy(capacity=4096) if args.cache else None
+    admission = None
+    if args.admission:
+        tw, cw = (int(x) for x in args.admission.split(","))
+        admission = AdmissionPolicy(throughput_watermark=tw,
+                                    critical_watermark=cw)
+    router = None
+    if args.replicas > 1:
+        engines = [index.serve(params, bucket_sizes=buckets, obs=obs)
+                   for _ in range(args.replicas)]
+        router = ReplicaRouter(engines, policy=RouterPolicy(), obs=obs)
+        srv = AsyncAnnEngine(
+            router,
+            CoalescePolicy(max_batch=max(buckets),
+                           max_wait_ms=args.max_wait_ms,
+                           default_deadline_ms=args.deadline_ms),
+            obs=obs, cache=cache, admission=admission)
+    else:
+        engines = None
+        srv = index.serve_async(params, max_wait_ms=args.max_wait_ms,
+                                default_deadline_ms=args.deadline_ms,
+                                bucket_sizes=buckets, obs=obs,
+                                cache=cache, admission=admission)
+    for eng in (engines if engines is not None else [srv.engine]):
+        eng.warmup()
+    print(f"offering ~{args.qps:g} qps "
           f"(deadline={args.deadline_ms} ms, "
-          f"max_wait={args.max_wait_ms:g} ms)")
+          f"max_wait={args.max_wait_ms:g} ms, cache={bool(cache)}, "
+          f"admission={args.admission or 'off'}, "
+          f"replicas={args.replicas}, "
+          f"priority_mix={args.priority_mix:g})")
 
     rng = np.random.RandomState(0)
     ds_dim = index.dim
     n_requests = args.batches * args.max_batch
+    # a finite query pool, so --cache has repeats to replay
+    pool = rng.normal(size=(32, ds_dim)).astype(np.float32)
     futs = []
     t_next = time.perf_counter()
-    for _ in range(n_requests):
+    for i in range(n_requests):
         t_next += rng.exponential(1.0 / args.qps)
         dt = t_next - time.perf_counter()
         if dt > 0:
             time.sleep(dt)
-        q = rng.normal(size=(ds_dim,)).astype(np.float32)
-        futs.append((time.perf_counter(), srv.submit(q)))
+        prio = ("critical" if rng.random_sample() < args.priority_mix
+                else "throughput")
+        q = pool[i % pool.shape[0]]
+        futs.append((time.perf_counter(), srv.submit(q, priority=prio)))
     lats, rejected = [], 0
     for submit_t, fut in futs:
         try:
@@ -176,11 +228,14 @@ def serve_async_clients(index, params, buckets, args, obs=None):
             # here would measure this loop, not the request)
             res = fut.result(timeout=120)
             lats.append((res.done_t - submit_t) * 1e3)
-        except Exception:                        # noqa: BLE001 - deadline
+        except Exception:                # noqa: BLE001 - deadline/admission
             rejected += 1
     srv.close()
+    if router is not None:
+        router.close()
 
-    st, est = srv.stats(), srv.engine.stats()
+    st = srv.stats()
+    est = (engines[0] if engines is not None else srv.engine).stats()
     if lats:
         lat = np.asarray(lats)
         print(f"client-observed: p50={np.percentile(lat, 50):.1f}ms "
@@ -190,15 +245,32 @@ def serve_async_clients(index, params, buckets, args, obs=None):
     print(f"\nsubmitted {st['submitted']:.0f} requests -> "
           f"{st['batches_dispatched']:.0f} batches "
           f"(mean size {st.get('batch_size_mean', 1):.1f}) | "
-          f"served={st['served']:.0f} rejected={rejected} | "
+          f"served={st['served']:.0f} cache={st['served_cache']:.0f} "
+          f"shed={st['rejected_admission']:.0f} rejected={rejected} | "
           f"queue wait p50={st.get('queue_wait_p50_ms', 0):.2f}ms "
           f"p99={st.get('queue_wait_p99_ms', 0):.2f}ms")
+    if srv.cache is not None:
+        cst = srv.cache.stats()
+        print(f"cache: hit_rate={cst['hit_rate']:.2f} "
+              f"(hits={cst['hits']:.0f} misses={cst['misses']:.0f} "
+              f"evictions={cst['evictions']:.0f})")
+    if srv.admission is not None:
+        ast = srv.admission.stats()
+        print(f"admission: shed critical={ast['shed_critical']:.0f} "
+              f"throughput={ast['shed_throughput']:.0f}")
+    if router is not None:
+        rst = router.stats()
+        per = " ".join(f"r{i}={rst[f'replica{i}_served']:.0f}"
+                       for i in range(len(router)))
+        print(f"router: {per} hedges={rst['hedges']:.0f} "
+              f"discarded={rst['hedge_discarded']:.0f}")
     print(f"engine: p50={est.get('latency_p50_ms', 0):.1f}ms "
           f"p95={est.get('latency_p95_ms', 0):.1f}ms "
           f"p99={est.get('latency_p99_ms', 0):.1f}ms | "
           f"jit entries={est['jit_cache_size']:.0f} "
           f"padded={est['padded_queries']:.0f}")
-    for b in sorted(srv.engine.bucket_sizes):
+    bucket_engine = engines[0] if engines is not None else srv.engine
+    for b in sorted(bucket_engine.bucket_sizes):
         if f"bucket{b}_chunks" in est:
             print(f"  bucket {b:3d}: {est[f'bucket{b}_chunks']:4.0f} chunks "
                   f"p50={est[f'bucket{b}_p50_ms']:.1f}ms "

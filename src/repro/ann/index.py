@@ -510,7 +510,8 @@ class AnnIndex:
                     max_batch: Optional[int] = None,
                     max_wait_ms: float = 2.0,
                     default_deadline_ms: Optional[float] = None,
-                    mesh=None, start: bool = True, obs=None, **engine_kw):
+                    mesh=None, start: bool = True, obs=None,
+                    cache=None, admission=None, clock=None, **engine_kw):
         """An async coalescing front-end (:class:`repro.serve.coalescer.
         AsyncAnnEngine`) over :meth:`serve`: single queries with
         per-request deadlines in, bucketed batches through the jit cache,
@@ -520,6 +521,13 @@ class AnnIndex:
         exactly fills the biggest compiled executable.  The wrapped batched
         engine stays reachable as ``.engine``.  One ``obs`` bundle covers
         both layers: the coalescer inherits the engine's.
+
+        The serving-tier knobs pass straight through: ``cache`` (a
+        ``repro.serve.CachePolicy`` or ready ``ResultCache``) replays
+        repeated queries from their quantized-code key, ``admission`` (an
+        ``AdmissionPolicy`` or ``AdmissionController``) sheds by priority
+        class at queue-depth watermarks, and ``clock`` injects a virtual
+        clock for deterministic tests (pair with ``start=False``).
         """
         from repro.serve.coalescer import AsyncAnnEngine, CoalescePolicy
         engine = self.serve(params, mesh=mesh, obs=obs, **engine_kw)
@@ -528,4 +536,5 @@ class AnnIndex:
             else engine.bucket_sizes[-1],
             max_wait_ms=max_wait_ms,
             default_deadline_ms=default_deadline_ms)
-        return AsyncAnnEngine(engine, policy, start=start)
+        return AsyncAnnEngine(engine, policy, start=start, cache=cache,
+                              admission=admission, clock=clock)

@@ -4,8 +4,9 @@
 # from the registry module, NOT here, to keep the import graph acyclic) and
 # are selected purely via SearchParams.backend on an index built with
 # IndexSpec(quant=...).
-from repro.quant.codec import (dequantize, fit_scales,  # noqa: F401
-                               max_error_bound, no_scales, quantize,
-                               quantize_query)
+from repro.quant.codec import (cache_codes, code_key,  # noqa: F401
+                               dequantize, fit_scales, max_error_bound,
+                               no_scales, quantize, quantize_query,
+                               query_cache_key)
 from repro.quant.scheme import (QUANT_DTYPES, QuantSpec,  # noqa: F401
                                 coerce_quant, required_quant_dtype)

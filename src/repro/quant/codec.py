@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.quant.scheme import QuantSpec
 
@@ -99,6 +100,47 @@ def quantize_query(q: jax.Array, levels: float | None = None) -> tuple:
     scale = jnp.maximum(amax, _EPS) / levels
     codes = jnp.clip(jnp.round(q / scale), -levels, levels).astype(jnp.int32)
     return codes, scale
+
+
+def cache_codes(q, levels: float = INT8_LEVELS) -> tuple:
+    """Symmetric per-query int8 codes + scale for the serving result cache.
+
+    Host-side numpy (the cache key is computed on the submit path, outside
+    any jit): ``code = clip(round(q / s), -levels, levels)`` with ``s =
+    max|q| / levels`` — the same symmetric max-abs construction as the
+    stored table, narrowed to the int8 grid so the key is 1 byte/dim.
+    Identical queries always produce identical (codes, scale); two queries
+    with equal codes AND equal scale reconstruct to the same vector within
+    half a quantization step per element, which is what makes the codes a
+    collision-bounded cache key.
+
+    q: (d,) float vector; returns (codes int8 (d,), scale float32 scalar).
+    """
+    q = np.asarray(q, np.float32).reshape(-1)
+    amax = float(np.max(np.abs(q))) if q.size else 0.0
+    scale = np.float32(max(amax, _EPS) / levels)
+    codes = np.clip(np.rint(q / scale), -levels, levels).astype(np.int8)
+    return codes, scale
+
+
+def code_key(codes, scale) -> bytes:
+    """Stable exact-match key bytes for a quantized query.
+
+    The key is the int8 code vector verbatim plus the little-endian float32
+    bit pattern of the scale: key equality is EXACTLY (codes, scale)
+    equality — no hashing, so no false hits by construction (the property
+    ``tests/test_serve_tier.py`` pins with Hypothesis).  Stable across
+    processes and platforms (fixed dtypes, fixed byte order).
+    """
+    codes = np.ascontiguousarray(codes, dtype=np.int8)
+    scale_bits = np.asarray(scale, dtype="<f4").tobytes()
+    return codes.tobytes() + scale_bits
+
+
+def query_cache_key(q, levels: float = INT8_LEVELS) -> bytes:
+    """:func:`cache_codes` + :func:`code_key` in one step — the key the
+    serving tier's result cache (``repro.serve.cache``) uses."""
+    return code_key(*cache_codes(q, levels))
 
 
 def max_error_bound(spec: QuantSpec, scales) -> jax.Array:

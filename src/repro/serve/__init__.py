@@ -4,5 +4,12 @@ from repro.serve.coalescer import AsyncAnnEngine  # noqa: F401
 from repro.serve.coalescer import AsyncServeResult  # noqa: F401
 from repro.serve.coalescer import CoalescePolicy  # noqa: F401
 from repro.serve.coalescer import DeadlineExceeded  # noqa: F401
+from repro.serve.cache import CachePolicy, ResultCache  # noqa: F401
+from repro.serve.admission import AdmissionController  # noqa: F401
+from repro.serve.admission import AdmissionPolicy  # noqa: F401
+from repro.serve.admission import AdmissionRejected  # noqa: F401
+from repro.serve.admission import PRIORITIES  # noqa: F401
+from repro.serve.router import ReplicaRouter, RouterPolicy  # noqa: F401
+from repro.serve.router import RouterResult  # noqa: F401
 from repro.serve.knnlm import KNNLMDatastore, knnlm_logits  # noqa: F401
 from repro.obs import Observability, NULL_OBS  # noqa: F401

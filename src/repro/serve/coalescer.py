@@ -38,6 +38,17 @@ Typical use::
     print(srv.stats())                           # coalescing observability
 
 Or in one step from the facade: ``index.serve_async(params, max_batch=16)``.
+
+The serving tier composes here.  ``cache=`` probes a
+:class:`~repro.serve.cache.ResultCache` BEFORE anything queues (a hit
+resolves the future immediately, for free); ``admission=`` applies
+:class:`~repro.serve.admission.AdmissionPolicy` queue-depth watermarks per
+priority class (a shed request's future gets
+:class:`~repro.serve.admission.AdmissionRejected`); ``submit(...,
+priority=...)`` ranks the two classes in batch formation — critical before
+throughput, earliest deadline first within each class.  ``clock=`` injects
+a virtual clock (with ``start=False`` plus :meth:`due_at`/:meth:`pump`)
+so every timing test in ``tests/serving_harness.py`` runs without sleeping.
 """
 from __future__ import annotations
 
@@ -45,11 +56,14 @@ import itertools
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, NamedTuple, Optional
+from typing import Dict, List, NamedTuple, Optional, Union
 
 import numpy as np
 
 from repro.obs import NULL_OBS, LogHistogram, Observability
+from repro.serve.admission import (PRIORITIES, AdmissionController,
+                                   AdmissionPolicy, AdmissionRejected)
+from repro.serve.cache import CachePolicy, ResultCache
 
 __all__ = ["CoalescePolicy", "DeadlineExceeded", "AsyncServeResult",
            "AsyncAnnEngine"]
@@ -93,18 +107,22 @@ class AsyncServeResult(NamedTuple):
 
 
 class _Pending(NamedTuple):
-    """One queued request.  Sort key = (deadline, seq): earliest deadline
-    first, FIFO among equal deadlines (seq is the admission counter)."""
+    """One queued request.  Sort key = (priority, deadline, seq): critical
+    class before throughput class, earliest deadline first within a class,
+    FIFO among equal deadlines (seq is the admission counter).  With a
+    single traffic class (priority defaults to 0) this is pure EDF."""
     seq: int
     query: np.ndarray        # (d,)
-    enqueue_t: float         # perf_counter seconds
-    deadline_t: Optional[float]   # absolute perf_counter seconds, or None
+    enqueue_t: float         # clock seconds
+    deadline_t: Optional[float]   # absolute clock seconds, or None
     future: Future
+    priority: int = 0        # PRIORITIES rank: 0 = critical, 1 = throughput
+    cache_key: Optional[bytes] = None   # set when a result cache is attached
 
     @property
     def sort_key(self):
         d = self.deadline_t if self.deadline_t is not None else float("inf")
-        return (d, self.seq)
+        return (self.priority, d, self.seq)
 
 
 def select_batch(pending: List[_Pending], now: float, max_batch: int
@@ -112,9 +130,10 @@ def select_batch(pending: List[_Pending], now: float, max_batch: int
     """Pure batch-formation step (unit-testable without threads).
 
     Splits ``pending`` into (batch, expired, rest): the up-to-``max_batch``
-    most urgent live requests in earliest-deadline-first order, the requests
-    whose deadline has already passed at ``now``, and the remainder (still
-    queued, in arrival order).
+    most urgent live requests in (priority, deadline, arrival) order —
+    critical class before throughput, earliest deadline first within a
+    class — the requests whose deadline has already passed at ``now``, and
+    the remainder (still queued, in arrival order).
     """
     expired = [p for p in pending
                if p.deadline_t is not None and p.deadline_t < now]
@@ -135,12 +154,26 @@ class AsyncAnnEngine:
     coalescer composes with sharding for free.
 
     With ``start=False`` no dispatcher thread runs and batches are formed
-    only by explicit :meth:`flush` calls — deterministic, for tests and for
-    callers that drive their own event loop.
+    only by explicit :meth:`flush` / :meth:`pump` calls — deterministic, for
+    tests and for callers that drive their own event loop.
+
+    ``cache`` / ``admission`` accept either a policy (a
+    :class:`~repro.serve.cache.CachePolicy` /
+    :class:`~repro.serve.admission.AdmissionPolicy`, wrapped here sharing
+    this engine's obs and clock) or a ready-made
+    :class:`~repro.serve.cache.ResultCache` /
+    :class:`~repro.serve.admission.AdmissionController` (e.g. one cache
+    shared across several engines).  ``clock`` is any zero-arg callable
+    returning seconds; injecting a virtual clock is only deterministic with
+    ``start=False`` (the dispatcher thread's condition waits are real time).
     """
 
     def __init__(self, engine, policy: CoalescePolicy = CoalescePolicy(), *,
-                 start: bool = True, obs: Optional[Observability] = None):
+                 start: bool = True, obs: Optional[Observability] = None,
+                 cache: Optional[Union[CachePolicy, ResultCache]] = None,
+                 admission: Optional[Union[AdmissionPolicy,
+                                           AdmissionController]] = None,
+                 clock=None):
         if policy.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if policy.max_wait_ms < 0:
@@ -151,15 +184,26 @@ class AsyncAnnEngine:
         # engine's so one handle covers the whole serving stack
         self.obs = obs if obs is not None \
             else getattr(engine, "obs", None) or NULL_OBS
+        self._clock = clock if clock is not None else time.perf_counter
+        if isinstance(cache, CachePolicy):
+            cache = ResultCache(cache, clock=self._clock, obs=self.obs)
+        self.cache: Optional[ResultCache] = cache
+        if isinstance(admission, AdmissionPolicy):
+            admission = AdmissionController(admission, obs=self.obs,
+                                            clock=self._clock)
+        self.admission: Optional[AdmissionController] = admission
         self._pending: List[_Pending] = []
         self._lock = threading.Condition()
         self._seq = itertools.count()
         self._closed = False
+        self._inflight = 0       # flushes past batch pick-up, pre-resolve
         # observability — distributions live in bounded log-bucketed
         # sketches (constant memory under sustained traffic, mergeable)
         self.submitted = 0
         self.served = 0
+        self.served_cache = 0
         self.rejected_deadline = 0
+        self.rejected_admission = 0
         self.cancelled = 0
         self.batches_dispatched = 0
         self._batch_size_hist = LogHistogram()
@@ -172,14 +216,21 @@ class AsyncAnnEngine:
 
     # -- client side ---------------------------------------------------------
 
-    def submit(self, query, *, deadline_ms: Optional[float] = None) -> Future:
+    def submit(self, query, *, deadline_ms: Optional[float] = None,
+               priority: str = "critical") -> Future:
         """Enqueue one query ``(d,)`` (or ``(1, d)``); returns a Future that
         resolves to an :class:`AsyncServeResult` — or raises
-        :class:`DeadlineExceeded` if the deadline expires before dispatch.
+        :class:`DeadlineExceeded` if the deadline expires before dispatch,
+        or :class:`~repro.serve.admission.AdmissionRejected` if the request
+        is shed at admission.
 
         ``deadline_ms`` is relative to NOW (submission time); it bounds
         QUEUE time, not total time — a request dispatched just inside its
-        deadline still runs to completion.
+        deadline still runs to completion.  ``priority`` is one of
+        ``repro.serve.admission.PRIORITIES``; it selects the admission
+        watermark and the request's rank in batch formation.  With a result
+        cache attached, a hit resolves the future before any of that — a
+        replay is never queued, never shed, and costs no engine work.
         """
         q = np.asarray(query, np.float32)
         if q.ndim == 2 and q.shape[0] == 1:
@@ -188,27 +239,77 @@ class AsyncAnnEngine:
             raise ValueError(
                 f"submit takes ONE query (d,); got shape {q.shape} — "
                 "for ready-made batches call engine.search directly")
+        if priority not in PRIORITIES:
+            raise ValueError(
+                f"unknown priority {priority!r}; one of {PRIORITIES}")
         if deadline_ms is None:
             deadline_ms = self.policy.default_deadline_ms
-        now = time.perf_counter()
+        now = self._clock()
         fut: Future = Future()
+        key: Optional[bytes] = None
+        if self.cache is not None:
+            key = self.cache.key_for(q)
+            hit = self.cache.lookup(q, key=key, now=now)
+            if hit is not None:
+                seq = next(self._seq)
+                with self._lock:
+                    if self._closed:
+                        raise RuntimeError("AsyncAnnEngine is closed")
+                    self.submitted += 1
+                    self.served_cache += 1
+                # replay: zero queue time, no batch, no engine latency —
+                # counted as served_cache, NOT served (engine batches only)
+                self.obs.tracer.async_begin(
+                    "request", seq, cat="request",
+                    args={"deadline_ms": deadline_ms, "cache": "hit"})
+                fut.set_result(AsyncServeResult(
+                    ids=hit[0], dists=hit[1], queue_wait_ms=0.0,
+                    batch_size=0.0, latency_ms=0.0, done_t=now))
+                self.obs.tracer.async_end("request", seq,
+                                          args={"outcome": "cache_hit"})
+                if self.obs.metrics:
+                    self.obs.registry.counter(
+                        "coalescer_requests_total",
+                        "requests by final outcome",
+                    ).inc(1, outcome="cache_hit")
+                return fut
         item = _Pending(
             seq=next(self._seq), query=q, enqueue_t=now,
             deadline_t=None if deadline_ms is None
             else now + deadline_ms / 1e3,
-            future=fut)
+            future=fut, priority=PRIORITIES.index(priority), cache_key=key)
         with self._lock:
             if self._closed:
                 raise RuntimeError("AsyncAnnEngine is closed")
-            self._pending.append(item)
             self.submitted += 1
-            self._lock.notify_all()
-        # async ("b"/"e") request lifeline: enqueue here on the client
-        # thread, closed on the dispatcher thread at resolve time — the
-        # cross-thread view Perfetto draws above the per-thread span stacks
-        self.obs.tracer.async_begin(
-            "request", item.seq, cat="request",
-            args={"deadline_ms": deadline_ms})
+            # admission looks at the queue depth under the SAME lock that
+            # guards the queue, so the watermark comparison is exact
+            if (self.admission is not None
+                    and not self.admission.admit(len(self._pending),
+                                                 priority)):
+                self.rejected_admission += 1
+                shed = True
+            else:
+                shed = False
+                self._pending.append(item)
+                # async ("b"/"e") request lifeline: opened here INSIDE the
+                # lock — before notify_all can wake a dispatcher that would
+                # otherwise resolve (async_end) the request first — closed
+                # on the dispatcher thread at resolve time.  This is the
+                # cross-thread view Perfetto draws above the span stacks.
+                self.obs.tracer.async_begin(
+                    "request", item.seq, cat="request",
+                    args={"deadline_ms": deadline_ms, "priority": priority})
+                self._lock.notify_all()
+        if shed:
+            if self.obs.metrics:
+                self.obs.registry.counter(
+                    "coalescer_requests_total", "requests by final outcome",
+                ).inc(1, outcome="rejected_admission")
+            fut.set_exception(AdmissionRejected(
+                f"queue depth at {priority!r} watermark "
+                f"({self.admission.policy.watermark(priority)}) — request "
+                "shed at admission"))
         return fut
 
     # -- dispatch ------------------------------------------------------------
@@ -227,7 +328,7 @@ class AsyncAnnEngine:
                     return
                 # flush when full, else sleep out the oldest request's
                 # remaining wait budget (new arrivals re-notify)
-                now = time.perf_counter()
+                now = self._clock()
                 if (len(self._pending) < self.policy.max_batch
                         and self._oldest_age_s(now) < max_wait_s
                         and not self._closed):
@@ -246,11 +347,70 @@ class AsyncAnnEngine:
                 return n
             n += served
 
+    def _due_locked(self, now: float) -> bool:
+        """True when the policy calls for a flush at ``now`` (lock held):
+        the queue is full, the oldest request has aged out its wait budget,
+        or the engine is closing — EXACTLY the dispatcher thread's wake
+        conditions, so a pump-driven test sees the same batch boundaries a
+        live engine would.  (Expired deadlines are shed at the next policy
+        flush, not eagerly: a deadline alone never forces a partial batch.)
+        """
+        if not self._pending:
+            return False
+        if self._closed or len(self._pending) >= self.policy.max_batch:
+            return True
+        return self._oldest_age_s(now) >= self.policy.max_wait_ms / 1e3
+
+    def due_at(self) -> Optional[float]:
+        """Earliest clock time at which a flush becomes due, or None with
+        an empty queue.  Returns ``now`` when one is due already.  This is
+        the scheduling signal the deterministic serving harness
+        (``tests/serving_harness.py``) advances its virtual clock to —
+        batch formation follows the policy exactly, without sleeping."""
+        with self._lock:
+            now = self._clock()
+            if not self._pending:
+                return None
+            if self._due_locked(now):
+                return now
+            return (min(p.enqueue_t for p in self._pending)
+                    + self.policy.max_wait_ms / 1e3)
+
+    def pump(self, max_batches: Optional[int] = None) -> int:
+        """Dispatch batches only while the policy says one is DUE (contrast
+        :meth:`flush`, which force-drains).  Returns requests resolved.
+        With ``start=False`` and an injected clock this is the event-loop
+        step: advance the clock to :meth:`due_at`, then ``pump()``."""
+        resolved = 0
+        batches = 0
+        while max_batches is None or batches < max_batches:
+            with self._lock:
+                if not self._due_locked(self._clock()):
+                    break
+            n = self._flush_once()
+            if n == 0:      # drained by a concurrent flush
+                break
+            resolved += n
+            batches += 1
+        return resolved
+
     def _flush_once(self) -> int:
-        tracer = self.obs.tracer
         with self._lock:
             if not self._pending:
                 return 0
+            # committed: from here until the finally, close(drain=True)
+            # must wait — the batch leaves _pending BEFORE its futures
+            # resolve, so "queue empty" alone does not mean "drained"
+            self._inflight += 1
+        try:
+            return self._flush_committed()
+        finally:
+            with self._lock:
+                self._inflight -= 1
+                self._lock.notify_all()
+
+    def _flush_committed(self) -> int:
+        tracer = self.obs.tracer
         resolved = 0
         n_shed = n_cancelled = 0
         live: List[_Pending] = []
@@ -258,7 +418,7 @@ class AsyncAnnEngine:
             with self._lock:
                 if not self._pending:
                     return 0   # drained by a concurrent flush
-                now = time.perf_counter()
+                now = self._clock()
                 n_pending = len(self._pending)
                 batch, expired, rest = select_batch(
                     self._pending, now, self.policy.max_batch)
@@ -325,7 +485,7 @@ class AsyncAnnEngine:
                                      args={"outcome": "error"})
                     p.future.set_exception(e)
                 return resolved + len(live)
-        done_t = time.perf_counter()
+        done_t = self._clock()
         with tracer.span("resolve", cat="coalescer",
                          args={"batch": len(live)}):
             with self._lock:
@@ -348,6 +508,11 @@ class AsyncAnnEngine:
                               "true size of dispatched batches"
                               ).observe(len(live))
             for i, p in enumerate(live):
+                if self.cache is not None and p.cache_key is not None:
+                    # populate BEFORE resolving so a client that re-submits
+                    # the moment its future completes already hits
+                    self.cache.insert(p.query, res.ids[i], res.dists[i],
+                                      key=p.cache_key, now=done_t)
                 p.future.set_result(AsyncServeResult(
                     ids=res.ids[i], dists=res.dists[i],
                     queue_wait_ms=waits[i], batch_size=float(len(live)),
@@ -362,7 +527,14 @@ class AsyncAnnEngine:
 
     def close(self, drain: bool = True):
         """Stop accepting requests; by default drain the queue first.  With
-        ``drain=False`` still-queued futures are cancelled."""
+        ``drain=False`` still-queued futures are cancelled.
+
+        Draining waits for IN-FLIGHT batches too: a flush that has popped
+        its batch but not yet resolved the futures leaves the queue empty
+        while work is outstanding, so close loops (flush + wait) until the
+        queue is empty AND no flush is mid-dispatch — only then is every
+        accepted future settled (the drain-under-load regression test in
+        ``tests/test_serve_tier.py`` pins this)."""
         with self._lock:
             self._closed = True
             if not drain:
@@ -373,8 +545,16 @@ class AsyncAnnEngine:
         if self._thread is not None:
             self._thread.join(timeout=30)
             self._thread = None
-        elif drain:
-            self.flush()
+        if drain:
+            while True:
+                self.flush()
+                with self._lock:
+                    if not self._pending and not self._inflight:
+                        return
+                    if self._inflight:
+                        # the 1 s timeout only guards a lost wakeup; the
+                        # finally-block notify fires as each flush lands
+                        self._lock.wait(timeout=1.0)
 
     def __enter__(self):
         return self
@@ -398,7 +578,9 @@ class AsyncAnnEngine:
             out = {
                 "submitted": float(self.submitted),
                 "served": float(self.served),
+                "served_cache": float(self.served_cache),
                 "rejected_deadline": float(self.rejected_deadline),
+                "rejected_admission": float(self.rejected_admission),
                 "cancelled": float(self.cancelled),
                 "pending": float(len(self._pending)),
                 "batches_dispatched": float(self.batches_dispatched),

@@ -1,0 +1,222 @@
+"""Deterministic serving test harness: virtual clock + scripted arrivals.
+
+Every timing-sensitive serving test (coalescer flush policy, deadline
+shedding, admission watermarks, cache TTL, overload tails) runs on this
+harness instead of wall-clock sleeps:
+
+* :class:`VirtualClock` — a zero-arg callable (drop-in for
+  ``time.perf_counter``) that only moves when a test advances it, injected
+  into :class:`~repro.serve.AsyncAnnEngine` (and the cache / admission
+  controller it wraps) via their ``clock=`` parameter;
+* :class:`Arrival` — one scripted request: arrival time, query, deadline,
+  priority class, and a tag to find its future again;
+* :class:`ServingHarness` — the event loop: replays an arrival schedule
+  against a ``start=False`` engine, interleaving submissions with
+  policy-due batch dispatch (``due_at()`` → advance clock → ``pump()``),
+  exactly as the real dispatcher thread would — minus the thread, the
+  sleeps, and the flakes.
+
+Optionally the harness models SERVICE TIME as a single busy server: with
+``service_time_s`` set (a float, or a callable of batch size), each
+dispatched batch occupies the server for that long and the next flush
+cannot start before the server frees — while arrivals land at their
+true times and keep queueing.  That makes queueing feedback real:
+arrivals faster than the modeled service rate build a backlog, queue
+depth grows, admission watermarks engage — which is how the
+admission-control tests create a deterministic overload and measure
+class-separated tail latency without touching real time.
+
+The engine under test still runs REAL searches (or a test double); only
+TIME is virtual.  Results therefore stay bit-identical to direct calls —
+the harness changes when work happens, never what it computes.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+
+class VirtualClock:
+    """A monotone test clock: callable like ``time.perf_counter`` but only
+    advanced explicitly.  Going backwards is a test bug and raises."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError("virtual time cannot go backwards")
+        self.t += dt
+        return self.t
+
+    def advance_to(self, t: float) -> float:
+        if t < self.t:
+            raise ValueError(
+                f"virtual time cannot go backwards ({t} < {self.t})")
+        self.t = float(t)
+        return self.t
+
+
+@dataclass(frozen=True)
+class Arrival:
+    """One scripted request in a serving schedule."""
+    t: float                         # virtual arrival time (seconds)
+    query: np.ndarray                # (d,) — what to submit
+    deadline_ms: Optional[float] = None
+    priority: str = "critical"
+    tag: Optional[str] = None        # key into ServingHarness.futures
+
+
+@dataclass
+class HarnessResult:
+    """What a replayed schedule produced, in arrival order."""
+    futures: List[object]                  # one Future per arrival
+    by_tag: Dict[str, object] = field(default_factory=dict)
+    dispatched: int = 0                    # requests resolved via pump()
+
+    def outcomes(self) -> List[str]:
+        """Per-arrival outcome: ``served`` / exception class name."""
+        out = []
+        for f in self.futures:
+            err = f.exception(timeout=0)
+            out.append("served" if err is None else type(err).__name__)
+        return out
+
+
+def poisson_schedule(rng: np.random.Generator, queries: np.ndarray,
+                     qps: float, duration_s: float, *,
+                     deadline_ms: Optional[float] = None,
+                     critical_fraction: float = 1.0) -> List[Arrival]:
+    """A reproducible open-loop Poisson arrival script: exponential gaps at
+    ``qps``, queries drawn round-robin from ``queries``, a ``rng``-drawn
+    ``critical_fraction`` of arrivals in the critical class and the rest in
+    the throughput class."""
+    arrivals: List[Arrival] = []
+    t = 0.0
+    i = 0
+    while True:
+        t += float(rng.exponential(1.0 / qps))
+        if t >= duration_s:
+            return arrivals
+        crit = bool(rng.random() < critical_fraction)
+        arrivals.append(Arrival(
+            t=t, query=queries[i % len(queries)], deadline_ms=deadline_ms,
+            priority="critical" if crit else "throughput"))
+        i += 1
+
+
+class ServingHarness:
+    """Replay scripted arrivals against a ``start=False`` AsyncAnnEngine.
+
+    The engine MUST have been built with ``start=False`` and
+    ``clock=harness_clock`` (the same :class:`VirtualClock` passed here) —
+    the harness takes the dispatcher thread's place.  ``run()`` merges the
+    arrival schedule with the engine's own :meth:`due_at` signal into one
+    deterministic event loop:
+
+    1. next event = min(next arrival, next policy-due flush time);
+    2. advance the virtual clock to it;
+    3. submit the arrival, or ``pump()`` the due batches (advancing the
+       clock by the modeled service time per dispatched batch).
+
+    Everything — batch boundaries, shed decisions, cache TTL expiry —
+    follows from the schedule and policies alone, so runs are repeatable
+    bit for bit.
+    """
+
+    def __init__(self, srv, clock: VirtualClock, *,
+                 service_time_s: Union[float, Callable[[int], float],
+                                       None] = None):
+        if srv._thread is not None:
+            raise ValueError("harness drives start=False engines only")
+        if srv._clock is not clock:
+            raise ValueError("engine must share the harness clock "
+                             "(serve_async(..., clock=clock))")
+        self.srv = srv
+        self.clock = clock
+        self._service_time = service_time_s
+        self._busy_until = clock()      # modeled server free from here
+
+    def _service_s(self, batch: int) -> float:
+        if self._service_time is None:
+            return 0.0
+        if callable(self._service_time):
+            return float(self._service_time(batch))
+        return float(self._service_time)
+
+    def _flush_time(self) -> Optional[float]:
+        """When the next flush can START: the policy's due time, delayed
+        until the modeled server is free.  None with an empty queue."""
+        due = self.srv.due_at()
+        if due is None:
+            return None
+        return max(due, self._busy_until)
+
+    def _flush_one(self, result: HarnessResult) -> int:
+        """Dispatch ONE due batch at the current virtual time and occupy
+        the server for its modeled service time."""
+        before = self.srv.batches_dispatched
+        n = self.srv.pump(max_batches=1)
+        result.dispatched += n
+        if self.srv.batches_dispatched > before:
+            # expired-only pumps shed without touching the engine: free
+            self._busy_until = self.clock() + self._service_s(n)
+        return n
+
+    def run(self, arrivals: Sequence[Arrival], *,
+            drain: bool = True) -> HarnessResult:
+        """Replay ``arrivals`` (any order; sorted by time, FIFO on ties).
+        Arrivals always enqueue at their scheduled times — a busy server
+        delays DISPATCH, not admission, so backlogs build exactly as they
+        would under a real overload.  With ``drain=True`` the queue is
+        pumped policy-due to empty after the last arrival, so every future
+        is settled on return."""
+        order = sorted(range(len(arrivals)),
+                       key=lambda i: (arrivals[i].t, i))
+        result = HarnessResult(futures=[None] * len(arrivals))
+        heap = [(arrivals[i].t, i) for i in order]
+        heapq.heapify(heap)
+        while heap:
+            t_arr, i = heap[0]
+            flush_t = self._flush_time()
+            if flush_t is not None and flush_t <= t_arr:
+                self.clock.advance_to(max(flush_t, self.clock()))
+                if self._flush_one(result) == 0:
+                    break   # defensive: due signal without a dispatch
+                continue
+            heapq.heappop(heap)
+            self.clock.advance_to(max(t_arr, self.clock()))
+            a = arrivals[i]
+            fut = self.srv.submit(a.query, deadline_ms=a.deadline_ms,
+                                  priority=a.priority)
+            result.futures[i] = fut
+            if a.tag is not None:
+                result.by_tag[a.tag] = fut
+        if drain:
+            while True:
+                flush_t = self._flush_time()
+                if flush_t is None:
+                    break
+                self.clock.advance_to(max(flush_t, self.clock()))
+                if self._flush_one(result) == 0:
+                    break
+        return result
+
+    def client_latencies_ms(self, arrivals: Sequence[Arrival],
+                            result: HarnessResult,
+                            priority: Optional[str] = None) -> List[float]:
+        """Client-observed latency (virtual ms from arrival to resolution)
+        of every SERVED request, optionally one priority class only."""
+        out = []
+        for a, f in zip(arrivals, result.futures):
+            if priority is not None and a.priority != priority:
+                continue
+            if f.exception(timeout=0) is None:
+                out.append((f.result(timeout=0).done_t - a.t) * 1e3)
+        return out

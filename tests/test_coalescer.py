@@ -6,9 +6,12 @@ bit-identical to the same query via ``AnnIndex.search``), *ordered*
 expired requests rejected, not silently served late).  The sharded engine
 mode must match the single-host engine's recall on a 1-device mesh — the
 same code path multi-device meshes run, no special-casing.
-"""
-import time
 
+Timing-sensitive tests run on the deterministic serving harness
+(``tests/serving_harness.py``): a virtual clock injected via
+``serve_async(..., clock=)`` replaces wall-clock sleeps, so flush timing
+and deadline expiry are exact, not raced.
+"""
 import numpy as np
 import pytest
 
@@ -16,6 +19,7 @@ from repro.ann import AnnIndex, IndexSpec, SearchParams
 from repro.data import make_vector_dataset
 from repro.serve import AnnEngine, DeadlineExceeded
 from repro.serve.coalescer import _Pending, select_batch
+from serving_harness import Arrival, ServingHarness, VirtualClock
 
 BUCKETS = (1, 2, 4, 8)
 PARAMS = SearchParams(k=10, queue_len=48, m_max=4, num_walkers=4,
@@ -107,24 +111,29 @@ def test_max_batch_splits_flushes(ds, index):
 
 
 def test_max_wait_flushes_partial_batch(ds, index):
-    """A lone request is served ~max_wait_ms after arrival even though the
-    batch never fills — the dispatcher thread's own clock, no flush() call."""
-    with index.serve_async(PARAMS, max_batch=64, max_wait_ms=10.0,
-                           bucket_sizes=BUCKETS) as srv:
-        t0 = time.perf_counter()
-        fut = srv.submit(ds.queries[0])
-        res = fut.result(timeout=30)
-        elapsed_ms = (time.perf_counter() - t0) * 1e3
-    assert res.ids.shape == (PARAMS.k,)
-    assert res.queue_wait_ms >= 9.0              # waited for the batch
-    assert elapsed_ms < 30_000
+    """A lone request is served EXACTLY max_wait_ms after arrival even
+    though the batch never fills — on the virtual clock the policy's wait
+    budget is exact, not a lower bound raced against the scheduler."""
+    clock = VirtualClock()
+    srv = index.serve_async(PARAMS, max_batch=64, max_wait_ms=10.0,
+                            bucket_sizes=BUCKETS, start=False, clock=clock)
+    harness = ServingHarness(srv, clock)
+    res = harness.run([Arrival(t=0.0, query=ds.queries[0])])
+    out = res.futures[0].result(timeout=0)
+    assert out.ids.shape == (PARAMS.k,)
+    assert out.queue_wait_ms == pytest.approx(10.0)  # the full wait budget
+    assert out.batch_size == 1.0
+    assert clock() == pytest.approx(0.010)       # flushed at due time exactly
+    srv.close()
 
 
 def test_expired_deadline_rejected_not_served(ds, index):
-    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS)
-    dead = srv.submit(ds.queries[0], deadline_ms=0.0)
+    clock = VirtualClock()
+    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS,
+                            clock=clock)
+    dead = srv.submit(ds.queries[0], deadline_ms=1.0)
     live = srv.submit(ds.queries[1], deadline_ms=10_000.0)
-    time.sleep(0.005)                            # let the deadline lapse
+    clock.advance(0.005)                         # the deadline lapses
     srv.flush()
     with pytest.raises(DeadlineExceeded):
         dead.result(timeout=0)

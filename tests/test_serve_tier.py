@@ -1,0 +1,527 @@
+"""Serving tier: result cache, admission control, replica routing.
+
+The serving-tier guarantees, pinned:
+
+* **cache** — a hit REPLAYS the engine's answer bit for bit, and a miss
+  falls through to serving unchanged, so caching never changes results;
+  key equality implies quantized-code equality (Hypothesis), so a false
+  hit is impossible by construction; LRU / TTL / recall-guard semantics;
+* **admission** — decisions are monotone in queue depth, and the critical
+  class is never shed before the throughput class (both Hypothesis-swept
+  over random policies); under a deterministic modeled overload, critical
+  p99 WITH admission control is strictly lower than without;
+* **router** — routed results match a single engine bit for bit
+  (replicated mode is data-parallel over identical replicas); hedged
+  requests resolve exactly once with the duplicate answer deduplicated;
+  sharded fan-out merges per-shard top-k deterministically;
+* **drain** — ``close(drain=True)`` returns only after in-flight batches
+  have resolved their futures (the drain-under-load regression).
+
+Timing-sensitive tests run on the deterministic harness
+(``tests/serving_harness.py``): virtual clock, scripted arrivals, modeled
+service time — no ``time.sleep`` anywhere in this file.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+try:  # property sweeps want hypothesis (requirements-dev); the rest of the
+    # file runs without it, matching tests/test_quant.py
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on bare installs
+    class _NoStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _NoStrategy()
+
+    def given(**kw):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(**kw):
+        return lambda f: f
+
+from repro.ann import AnnIndex, IndexSpec, SearchParams  # noqa: E402
+from repro.data import make_vector_dataset  # noqa: E402
+from repro.quant import cache_codes, query_cache_key  # noqa: E402
+from repro.serve import (AdmissionController, AdmissionPolicy,  # noqa: E402
+                         AdmissionRejected, AsyncAnnEngine, CachePolicy,
+                         CoalescePolicy, ReplicaRouter, ResultCache,
+                         RouterPolicy)
+from repro.serve.coalescer import _Pending, select_batch  # noqa: E402
+from serving_harness import (Arrival, ServingHarness,  # noqa: E402
+                             VirtualClock, poisson_schedule)
+
+BUCKETS = (1, 2, 4, 8)
+PARAMS = SearchParams(k=10, queue_len=48, m_max=4, num_walkers=4,
+                      max_steps=128, local_steps=4)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_vector_dataset("deep", n=1200, n_queries=16, k=10, dim=24,
+                               n_clusters=12, seed=7)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    return AnnIndex.build(ds, IndexSpec(degree=12, passes=1))
+
+
+class _Res:
+    def __init__(self, ids, dists):
+        self.ids, self.dists, self.latency_ms = ids, dists, 0.25
+
+
+class FakeEngine:
+    """Engine double: deterministic per-query answers derived from the
+    query itself, so parity and replay checks work without a real index."""
+
+    def __init__(self, k=4):
+        self.k = k
+        self.calls = 0
+
+    def search(self, queries):
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        self.calls += 1
+        ids = np.rint(q[:, :self.k] * 100).astype(np.int32)
+        dists = q[:, :self.k] * np.float32(0.5)
+        return _Res(ids, dists)
+
+
+# -- cache: keys ---------------------------------------------------------------
+
+@given(seed=st.integers(0, 10_000), d=st.integers(1, 48),
+       scale=st.sampled_from([1e-3, 1.0, 50.0]))
+@settings(max_examples=30, deadline=None)
+def test_cache_key_equality_implies_code_equality(seed, d, scale):
+    """No false hits by construction: two queries share a cache key IFF
+    their int8 codes AND scale are identical — the key is those bytes."""
+    rng = np.random.RandomState(seed)
+    q1 = (rng.randn(d) * scale).astype(np.float32)
+    q2 = (rng.randn(d) * scale).astype(np.float32)
+    c1, s1 = cache_codes(q1)
+    c2, s2 = cache_codes(q2)
+    same_codes = bool(np.array_equal(c1, c2) and s1 == s2)
+    assert (query_cache_key(q1) == query_cache_key(q2)) == same_codes
+    # and the key is a pure function of the query
+    assert query_cache_key(q1) == query_cache_key(q1.copy())
+
+
+def test_cache_key_stable_bytes():
+    key = query_cache_key(np.arange(8, dtype=np.float32))
+    assert isinstance(key, bytes) and len(key) == 8 + 4  # d int8 + f32 scale
+
+
+# -- cache: semantics ----------------------------------------------------------
+
+def _ids(*vals):
+    return np.asarray(vals, np.int32)
+
+
+def test_cache_lru_eviction_order():
+    c = ResultCache(CachePolicy(capacity=2))
+    qa, qb, qc = (np.full(4, v, np.float32) for v in (1.0, 2.0, 3.0))
+    c.insert(qa, _ids(1), _ids(1))
+    c.insert(qb, _ids(2), _ids(2))
+    assert c.lookup(qa) is not None       # touch a: b is now LRU
+    c.insert(qc, _ids(3), _ids(3))        # evicts b, not a
+    assert c.lookup(qb) is None
+    assert c.lookup(qa) is not None and c.lookup(qc) is not None
+    st_ = c.stats()
+    assert st_["evictions"] == 1 and st_["size"] == 2
+
+
+def test_cache_ttl_expiry_on_virtual_clock():
+    clock = VirtualClock()
+    c = ResultCache(CachePolicy(capacity=8, ttl_s=1.0), clock=clock)
+    q = np.ones(4, np.float32)
+    c.insert(q, _ids(7), _ids(7))
+    clock.advance(0.5)
+    assert c.lookup(q) is not None        # young enough
+    clock.advance(1.0)
+    assert c.lookup(q) is None            # aged out
+    st_ = c.stats()
+    assert st_["expirations"] == 1 and st_["size"] == 0
+    c.insert(q, _ids(7), _ids(7))         # re-insert restarts the TTL
+    assert c.lookup(q) is not None
+
+
+def test_cache_recall_guard_demotes_colliding_query():
+    """Two DIFFERENT queries can share a key (same codes after rounding);
+    guard_eps=0 refuses to replay across them, a loose guard allows it."""
+    codes, scale = cache_codes(np.array([1.0, 0.5, 0.0, 0.0], np.float32))
+    base = (codes.astype(np.float32) * scale)        # exactly on the grid
+    drift = base.copy()
+    drift[1] += scale / 4                            # same cell, new vector
+    assert query_cache_key(base) == query_cache_key(drift)
+    strict = ResultCache(CachePolicy(capacity=4, guard_eps=0.0))
+    strict.insert(base, _ids(1), _ids(1))
+    assert strict.lookup(drift) is None              # guarded
+    assert strict.stats()["guard_misses"] == 1
+    loose = ResultCache(CachePolicy(capacity=4, guard_eps=1.0))
+    loose.insert(base, _ids(1), _ids(1))
+    assert loose.lookup(drift) is not None           # within the bound
+
+
+def test_cache_insert_refreshes_existing_key():
+    c = ResultCache(CachePolicy(capacity=2))
+    q = np.ones(4, np.float32)
+    c.insert(q, _ids(1), _ids(1))
+    c.insert(q, _ids(2), _ids(2))
+    hit = c.lookup(q)
+    assert list(hit[0]) == [2] and len(c) == 1
+    assert c.stats()["evictions"] == 0
+
+
+def test_cache_policy_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        ResultCache(CachePolicy(capacity=0))
+    with pytest.raises(ValueError, match="ttl_s"):
+        ResultCache(CachePolicy(ttl_s=0.0))
+    with pytest.raises(ValueError, match="guard_eps"):
+        ResultCache(CachePolicy(guard_eps=-1.0))
+
+
+# -- cache through the coalescer: bit-identical replay -------------------------
+
+def test_cache_hit_bit_identical_to_direct_search(ds, index):
+    """THE cache pin: a miss falls through unchanged, and the hit replay
+    of the same query returns byte-identical arrays to AnnIndex.search."""
+    srv = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS,
+                            cache=CachePolicy(capacity=16))
+    q = ds.queries[0]
+    miss = srv.submit(q)
+    assert srv.flush() == 1
+    hit = srv.submit(q)                   # resolved without any flush
+    r_miss, r_hit = miss.result(timeout=0), hit.result(timeout=0)
+    direct = index.search(q[None], PARAMS)
+    np.testing.assert_array_equal(r_miss.ids, np.asarray(direct.ids)[0])
+    np.testing.assert_array_equal(r_miss.dists, np.asarray(direct.dists)[0])
+    np.testing.assert_array_equal(r_hit.ids, r_miss.ids)
+    np.testing.assert_array_equal(r_hit.dists, r_miss.dists)
+    assert r_hit.batch_size == 0.0 and r_hit.latency_ms == 0.0
+    st_ = srv.stats()
+    assert st_["served"] == 1 and st_["served_cache"] == 1
+    assert srv.cache.stats()["hits"] == 1
+    srv.close()
+
+
+def test_cached_and_uncached_miss_paths_identical(ds, index):
+    """Serving WITH a (cold) cache returns the same answers as serving
+    without one — the cache only ever replays, never computes."""
+    plain = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS)
+    cached = index.serve_async(PARAMS, start=False, bucket_sizes=BUCKETS,
+                               cache=CachePolicy(capacity=16))
+    f_plain = [plain.submit(q) for q in ds.queries[:4]]
+    f_cached = [cached.submit(q) for q in ds.queries[:4]]
+    plain.flush(), cached.flush()
+    for fp, fc in zip(f_plain, f_cached):
+        np.testing.assert_array_equal(fp.result().ids, fc.result().ids)
+        np.testing.assert_array_equal(fp.result().dists, fc.result().dists)
+    assert cached.cache.stats()["hits"] == 0      # all cold misses
+    plain.close(), cached.close()
+
+
+# -- admission: properties -----------------------------------------------------
+
+@given(tw=st.integers(1, 100), extra=st.integers(0, 100),
+       d1=st.integers(0, 300), d2=st.integers(0, 300))
+@settings(max_examples=60, deadline=None)
+def test_admission_monotone_in_queue_depth(tw, extra, d1, d2):
+    """Admitted at depth d ⇒ admitted at every shallower depth (for every
+    class): admission never flips back on as the queue grows."""
+    pol = AdmissionPolicy(throughput_watermark=tw,
+                          critical_watermark=tw + extra)
+    lo, hi = min(d1, d2), max(d1, d2)
+    for priority in ("critical", "throughput"):
+        if pol.admits(hi, priority):
+            assert pol.admits(lo, priority)
+
+
+@given(tw=st.integers(1, 100), extra=st.integers(0, 100),
+       depth=st.integers(0, 300))
+@settings(max_examples=60, deadline=None)
+def test_critical_never_shed_before_throughput(tw, extra, depth):
+    pol = AdmissionPolicy(throughput_watermark=tw,
+                          critical_watermark=tw + extra)
+    if not pol.admits(depth, "critical"):          # critical shed here...
+        assert not pol.admits(depth, "throughput")  # ...so throughput too
+
+
+def test_admission_policy_validation():
+    with pytest.raises(ValueError, match="throughput_watermark"):
+        AdmissionPolicy(throughput_watermark=0)
+    with pytest.raises(ValueError, match="never shed before"):
+        AdmissionPolicy(throughput_watermark=8, critical_watermark=4)
+    with pytest.raises(ValueError, match="unknown priority"):
+        AdmissionPolicy().admits(0, "bulk")
+
+
+def test_admission_through_submit_sheds_throughput_first():
+    srv = AsyncAnnEngine(
+        FakeEngine(), CoalescePolicy(max_batch=8, max_wait_ms=1.0),
+        start=False,
+        admission=AdmissionPolicy(throughput_watermark=1,
+                                  critical_watermark=2))
+    q = np.arange(4, dtype=np.float32)
+    keep = srv.submit(q, priority="throughput")        # depth 0: admitted
+    shed_t = srv.submit(q + 1, priority="throughput")  # depth 1: shed
+    keep_c = srv.submit(q + 2, priority="critical")    # depth 1: admitted
+    shed_c = srv.submit(q + 3, priority="critical")    # depth 2: shed
+    with pytest.raises(AdmissionRejected):
+        shed_t.result(timeout=0)
+    with pytest.raises(AdmissionRejected):
+        shed_c.result(timeout=0)
+    srv.flush()
+    assert keep.result(timeout=0).ids.shape == (4,)
+    assert keep_c.result(timeout=0).ids.shape == (4,)
+    st_ = srv.stats()
+    assert st_["rejected_admission"] == 2 and st_["served"] == 2
+    adm = srv.admission.stats()
+    assert adm["shed_throughput"] == 1 and adm["shed_critical"] == 1
+    srv.close()
+    with pytest.raises(ValueError, match="unknown priority"):
+        srv.submit(q, priority="bulk")
+
+
+def test_priority_ranks_batch_formation():
+    """Critical requests sort ahead of throughput requests in batch
+    formation even with LATER deadlines; EDF applies within a class."""
+    def pend(seq, deadline_t, priority):
+        return _Pending(seq=seq, query=np.zeros(2, np.float32),
+                        enqueue_t=0.0, deadline_t=deadline_t, future=None,
+                        priority=priority)
+    pending = [pend(0, 1.0, priority=1), pend(1, 9.0, priority=0),
+               pend(2, 5.0, priority=1), pend(3, 2.0, priority=0)]
+    batch, expired, rest = select_batch(pending, now=0.0, max_batch=3)
+    assert [p.seq for p in batch] == [3, 1, 0]   # critical EDF, then tput
+    assert [p.seq for p in rest] == [2]
+
+
+# -- admission: overload tail (deterministic, modeled service time) ------------
+
+def _overloaded_run(admission):
+    """Replay one fixed Poisson overload (offered ~3x modeled capacity,
+    half the traffic critical) and return (critical p99, harness, srv)."""
+    clock = VirtualClock()
+    srv = AsyncAnnEngine(
+        FakeEngine(),
+        CoalescePolicy(max_batch=4, max_wait_ms=2.0),
+        start=False, clock=clock, admission=admission)
+    harness = ServingHarness(srv, clock, service_time_s=0.010)  # 400 req/s
+    rng = np.random.default_rng(42)
+    queries = np.arange(32, dtype=np.float32)[:, None] * np.ones(
+        (1, 8), np.float32)
+    arrivals = poisson_schedule(rng, queries, qps=1200.0, duration_s=0.4,
+                                critical_fraction=0.5)
+    result = harness.run(arrivals)
+    lats = harness.client_latencies_ms(arrivals, result,
+                                       priority="critical")
+    assert lats, "no critical request survived the overload"
+    return float(np.percentile(lats, 99)), harness, srv
+
+
+def test_admission_bounds_critical_p99_under_overload():
+    """The acceptance pin: identical overloaded arrivals, critical-class
+    p99 WITH admission control strictly below without — shedding the
+    throughput class keeps the critical queue (and its tail) short."""
+    p99_off, _, srv_off = _overloaded_run(admission=None)
+    p99_on, _, srv_on = _overloaded_run(
+        admission=AdmissionPolicy(throughput_watermark=4,
+                                  critical_watermark=12))
+    assert p99_on < p99_off
+    adm = srv_on.admission.stats()
+    assert adm["shed_throughput"] > 0              # overload DID shed
+    assert adm["shed_throughput"] >= adm["shed_critical"]
+    assert srv_off.stats()["rejected_admission"] == 0
+    srv_off.close(), srv_on.close()
+
+
+def test_harness_replay_is_deterministic():
+    """Same schedule, same policies → bit-identical outcomes and stats."""
+    def run():
+        _, harness, srv = _overloaded_run(
+            admission=AdmissionPolicy(throughput_watermark=4,
+                                      critical_watermark=12))
+        st_ = srv.stats()
+        srv.close()
+        return st_
+    a, b = run(), run()
+    for key in ("submitted", "served", "rejected_admission",
+                "batches_dispatched"):
+        assert a[key] == b[key]
+
+
+# -- drain under load ----------------------------------------------------------
+
+class _BlockingEngine:
+    """Engine whose search parks until released — freezes a batch in
+    flight so the close()/drain race is reachable deterministically."""
+
+    def __init__(self):
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def search(self, queries):
+        q = np.atleast_2d(queries)
+        self.entered.set()
+        assert self.release.wait(timeout=30)
+        return _Res(np.zeros((q.shape[0], 4), np.int32),
+                    np.zeros((q.shape[0], 4), np.float32))
+
+
+def test_close_drain_waits_for_inflight_batch():
+    """Drain-under-load regression: a flush that popped its batch leaves
+    the queue EMPTY while the engine still runs — close(drain=True) must
+    wait for those futures, not return on the empty queue."""
+    eng = _BlockingEngine()
+    srv = AsyncAnnEngine(eng, CoalescePolicy(max_batch=2, max_wait_ms=0.0),
+                         start=False)
+    futs = [srv.submit(np.full(4, v, np.float32)) for v in (1.0, 2.0)]
+    worker = threading.Thread(target=srv.flush, daemon=True)
+    worker.start()
+    assert eng.entered.wait(timeout=10)   # batch popped, search in flight
+    state = {}
+
+    def closer():
+        srv.close(drain=True)
+        state["done_at_close"] = all(f.done() for f in futs)
+
+    ct = threading.Thread(target=closer, daemon=True)
+    ct.start()
+    ct.join(timeout=0.25)
+    assert ct.is_alive(), "close() returned while a batch was in flight"
+    eng.release.set()
+    ct.join(timeout=10)
+    assert not ct.is_alive()
+    assert state["done_at_close"], "close() returned before futures resolved"
+    worker.join(timeout=10)
+    for f in futs:
+        assert f.result(timeout=0).ids.shape == (4,)
+
+
+# -- router --------------------------------------------------------------------
+
+def test_router_parity_with_single_engine(ds, index):
+    """Replicated routing is transparent: results through a 2-replica
+    router (direct AND coalesced) match AnnIndex.search bit for bit."""
+    replicas = [index.serve(PARAMS, bucket_sizes=BUCKETS) for _ in range(2)]
+    router = ReplicaRouter(replicas,
+                           policy=RouterPolicy(strategy="round_robin"))
+    direct = index.search(ds.queries[:4], PARAMS)
+    for _ in range(2):                     # both replicas take a turn
+        res = router.search(ds.queries[:4])
+        np.testing.assert_array_equal(res.ids, np.asarray(direct.ids))
+        np.testing.assert_array_equal(res.dists, np.asarray(direct.dists))
+    srv = AsyncAnnEngine(router, CoalescePolicy(max_batch=8), start=False)
+    futs = [srv.submit(q) for q in ds.queries[:4]]
+    srv.flush()
+    for i, f in enumerate(futs):
+        np.testing.assert_array_equal(f.result().ids,
+                                      np.asarray(direct.ids)[i])
+    srv.close()
+    st_ = router.stats()
+    assert st_["replica0_served"] + st_["replica1_served"] == 3
+    router.close()
+
+
+def test_hedged_request_resolves_once_and_dedups():
+    """A hedge fires on deadline risk, the fast replica wins, and the
+    slow duplicate is discarded + counted — never double-resolved."""
+    slow_gate = threading.Event()
+
+    class SlowEngine(FakeEngine):
+        def search(self, queries):
+            assert slow_gate.wait(timeout=30)
+            return super().search(queries)
+
+    slow, fast = SlowEngine(), FakeEngine()
+    router = ReplicaRouter(
+        [slow, fast],
+        policy=RouterPolicy(strategy="round_robin", hedge_after_ms=5.0))
+    q = np.arange(8, dtype=np.float32)[None]
+    res = router.search(q)
+    assert res.hedged and res.replica == 1
+    np.testing.assert_array_equal(res.ids, FakeEngine().search(q).ids)
+    slow_gate.set()
+    router.drain_hedges()
+    st_ = router.stats()
+    assert st_["requests"] == 1            # resolved exactly once
+    assert st_["hedges"] == 1 and st_["hedge_wins"] == 1
+    assert st_["hedge_discarded"] == 1     # the duplicate, counted not used
+    router.close()
+
+
+def test_router_failover_marks_unhealthy_then_recovers():
+    clock = VirtualClock()
+
+    class DownEngine(FakeEngine):
+        def __init__(self):
+            super().__init__()
+            self.down = True
+
+        def search(self, queries):
+            if self.down:
+                raise RuntimeError("replica down")
+            return super().search(queries)
+
+    flaky, steady = DownEngine(), FakeEngine()
+    router = ReplicaRouter(
+        [flaky, steady],
+        policy=RouterPolicy(strategy="round_robin", hedge_after_ms=50.0,
+                            max_failures=1, cooldown_s=10.0),
+        clock=clock)
+    q = np.arange(8, dtype=np.float32)[None]
+    res = router.search(q)
+    assert res.replica == 1 and res.hedged          # failed over
+    assert router.stats()["replica0_healthy"] == 0.0
+    res = router.search(q)
+    assert res.replica == 1 and not res.hedged      # unhealthy one skipped
+    flaky.down = False
+    clock.advance(11.0)                             # cooldown lapses
+    res = router.search(q)
+    assert res.replica == 0                         # re-probed and serving
+    assert router.stats()["failovers"] == 1
+    router.close()
+
+
+def test_sharded_router_merges_global_topk():
+    """Corpus-sharded fan-out: per-shard local top-k remaps through shard
+    offsets and merges into a deterministic global top-k."""
+    class Shard(FakeEngine):
+        def __init__(self, dists):
+            super().__init__()
+            self._d = np.asarray(dists, np.float32)
+
+        def search(self, queries):
+            q = np.atleast_2d(queries)
+            b = q.shape[0]
+            return _Res(np.tile(np.arange(4, dtype=np.int32), (b, 1)),
+                        np.tile(self._d, (b, 1)))
+
+    router = ReplicaRouter(
+        [Shard([0.1, 0.4, 0.6, 0.9]), Shard([0.2, 0.3, 0.7, 0.8])],
+        mode="sharded", shard_offsets=[0, 1000])
+    res = router.search(np.ones((2, 8), np.float32))
+    assert res.replica == -1 and res.ids.shape == (2, 4)
+    np.testing.assert_array_equal(res.ids[0], [0, 1000, 1001, 1])
+    np.testing.assert_array_equal(res.ids[0], res.ids[1])
+    assert list(res.dists[0]) == sorted(res.dists[0])
+    router.close()
+
+
+def test_router_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        ReplicaRouter([])
+    with pytest.raises(ValueError, match="mode"):
+        ReplicaRouter([FakeEngine()], mode="mirrored")
+    with pytest.raises(ValueError, match="strategy"):
+        ReplicaRouter([FakeEngine()],
+                      policy=RouterPolicy(strategy="random"))
+    with pytest.raises(ValueError, match="shard offset"):
+        ReplicaRouter([FakeEngine(), FakeEngine()], mode="sharded",
+                      shard_offsets=[0])
+    with pytest.raises(ValueError, match="sharded"):
+        ReplicaRouter([FakeEngine()], shard_offsets=[0])
