@@ -38,6 +38,13 @@ def main() -> None:
                     help="batch-amortization sweep of the batch-major "
                          "engine (B x backend); appends rows to "
                          "BENCH_dist_backend.json (skips the figure suite)")
+    ap.add_argument("--sweep-build", action="store_true",
+                    help="construction-throughput sweep of the batched "
+                         "builder (build_batch x backend vs the serial "
+                         "reference); appends rows to BENCH_build.json "
+                         "(skips the figure suite)")
+    ap.add_argument("--build-out", default="BENCH_build.json",
+                    help="output path for --sweep-build")
     args = ap.parse_args()
 
     if args.sweep_backends:
@@ -48,6 +55,11 @@ def main() -> None:
     if args.sweep_batch:
         from benchmarks import batch_sweep
         batch_sweep.sweep(args.bench_out)
+        return
+
+    if args.sweep_build:
+        from benchmarks import build_sweep
+        build_sweep.sweep(args.build_out)
         return
 
     if args.sweep_serve:

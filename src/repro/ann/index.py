@@ -53,8 +53,9 @@ from repro.ann.spec import IndexSpec, SearchParams
 from repro.core.bfis import (bfis_search_batch, hnsw_search_batch,
                              search_topm_batch)
 from repro.core.build import (HNSWIndex, build_hnsw, build_nsg, exact_knn,
-                              normalize_rows)
-from repro.core.graph import PaddedCSR, group_by_indegree
+                              insert_points, normalize_rows, repair_deleted)
+from repro.core.graph import (PaddedCSR, compute_medoid, group_by_indegree,
+                              remap_sentinels)
 from repro.core.speedann import search_speedann_batch
 from repro.quant import codec as quant_codec
 from repro.quant.scheme import required_quant_dtype
@@ -62,7 +63,10 @@ from repro.quant.scheme import required_quant_dtype
 # format 2 adds quantized storage: codes + scales arrays, and indices whose
 # f32 vectors are not persisted (QuantSpec.keep_float=False) — readable only
 # by code that knows to dequantize.  Format-1 files load unchanged.
-_SAVE_FORMAT = 2
+# format 3 adds the tombstone array (incremental delete) — stamped only when
+# at least one vertex is actually tombstoned, so add-only/static indices stay
+# readable by format-2 readers.
+_SAVE_FORMAT = 3
 
 
 class SearchResult(NamedTuple):
@@ -172,7 +176,8 @@ class AnnIndex:
 
     def __init__(self, spec: IndexSpec, graph: PaddedCSR,
                  hnsw: Optional[HNSWIndex] = None,
-                 old_from_new: Optional[np.ndarray] = None):
+                 old_from_new: Optional[np.ndarray] = None,
+                 tombstone: Optional[np.ndarray] = None):
         self.spec = spec
         self.graph = graph
         self.hnsw = hnsw
@@ -180,11 +185,19 @@ class AnnIndex:
         # back to the caller's original ids (None when no relabelling)
         self.old_from_new = (None if old_from_new is None
                              else np.asarray(old_from_new, np.int64))
+        # incremental delete: (N,) bool in INTERNAL id space; tombstoned
+        # vertices stay in the graph as navigable waypoints but are masked
+        # out of every search/exact result (None == nothing deleted)
+        self.tombstone = (None if tombstone is None
+                          else np.asarray(tombstone, bool))
         # device-resident remap table, uploaded once per index (it enters
         # every searcher's executable as a jit argument, like the graph)
         self._ofn = (jnp.asarray(self.old_from_new, jnp.int32)
                      if self.old_from_new is not None
                      else jnp.zeros((0,), jnp.int32))
+        self._tomb = (jnp.asarray(self.tombstone)
+                      if self.tombstone is not None
+                      else jnp.zeros((0,), jnp.bool_))
         self._searcher_cache: Dict = {}
         self._host_vectors: Optional[np.ndarray] = None  # exact() cache
 
@@ -201,6 +214,12 @@ class AnnIndex:
     @property
     def metric(self) -> str:
         return self.spec.metric
+
+    @property
+    def n_alive(self) -> int:
+        """Live (non-tombstoned) vertex count."""
+        dead = 0 if self.tombstone is None else int(self.tombstone.sum())
+        return self.n_nodes - dead
 
     def __repr__(self) -> str:
         return (f"AnnIndex(builder={self.spec.builder!r}, "
@@ -235,7 +254,9 @@ class AnnIndex:
             hnsw = build_hnsw(data, degree=spec.degree,
                               upper_degree=spec.upper_degree,
                               seed=spec.seed, alpha=spec.alpha,
-                              metric=build_metric)
+                              metric=build_metric,
+                              build_batch=spec.build_batch,
+                              build_backend=spec.build_backend)
             base = apply_entry_policy(
                 quantize_graph(hnsw.base, spec.quant), spec)
             return cls(spec, base, hnsw=hnsw._replace(base=base))
@@ -243,7 +264,9 @@ class AnnIndex:
         graph = build_nsg(data, degree=spec.degree,
                           knn_k=spec.resolved_knn_k, alpha=spec.alpha,
                           ef_construction=spec.resolved_ef, seed=spec.seed,
-                          passes=spec.passes, metric=build_metric)
+                          passes=spec.passes, metric=build_metric,
+                          build_batch=spec.build_batch,
+                          build_backend=spec.build_backend)
         old_from_new = None
         if spec.n_top_fraction > 0:
             graph, old_from_new = group_by_indegree(
@@ -252,6 +275,173 @@ class AnnIndex:
                 top_fraction=spec.n_top_fraction)
         graph = apply_entry_policy(quantize_graph(graph, spec.quant), spec)
         return cls(spec, graph, old_from_new=old_from_new)
+
+    # -- incremental maintenance -------------------------------------------
+
+    def _build_metric(self) -> str:
+        return "l2" if self.spec.metric == "cosine" else self.spec.metric
+
+    def _invalidate(self) -> None:
+        """Drop every cache derived from the graph arrays (after mutation)."""
+        self._searcher_cache = {}
+        self._host_vectors = None
+
+    def add(self, new_vectors) -> np.ndarray:
+        """Insert new vectors into the live index without a rebuild.
+
+        Runs the SAME batched insertion path as construction
+        (:func:`repro.core.build.insert_points`) against the live graph:
+        one candidate-search round through the jit engine, vectorized
+        α-prune, deterministic reverse edges.  Cosine inputs are normalized
+        here; quantized indices quantize the new rows consistently
+        (per-vector scales are fit per new row, per-dim scales are reused so
+        existing codes stay bit-identical); the flattened top level is
+        rebuilt when present.  Returns the assigned ids in the caller's
+        (original) id space.
+        """
+        if self.spec.builder == "hnsw":
+            raise NotImplementedError(
+                "incremental add() is supported for the nsg builder only "
+                "(the hnsw upper levels would need re-sampling)")
+        new = np.asarray(new_vectors, np.float32)
+        if new.ndim == 1:
+            new = new[None, :]
+        if new.ndim != 2 or new.shape[1] != self.dim:
+            raise ValueError(
+                f"new vectors must be (K, {self.dim}), got {new.shape}")
+        if new.shape[0] == 0:
+            return np.zeros((0,), np.int64)
+        if self.spec.metric == "cosine":
+            new = normalize_rows(new)
+
+        spec, quant = self.spec, self.spec.quant
+        n_old = self.n_nodes
+        n_new = n_old + new.shape[0]
+
+        # grow the adjacency; the sentinel changes value with N, so the old
+        # rows' padding must be rewritten BEFORE the table grows
+        nbrs = np.full((n_new, self.graph.degree), n_new, np.int32)
+        nbrs[:n_old] = remap_sentinels(
+            np.asarray(self.graph.nbrs), n_old, n_new)
+
+        vectors = np.asarray(self.graph.vectors, np.float32)
+        codes = scales = None
+        store_new = new
+        if quant.enabled:
+            if quant.dtype == "int8" and not quant.per_dim:
+                # per-vector granularity: each row owns its scale, so new
+                # rows calibrate independently and old codes are untouched
+                s_new = quant_codec.fit_scales(new, quant)
+                scales = jnp.concatenate(
+                    [self.graph.scales, jnp.asarray(s_new, jnp.float32)])
+            else:
+                # per-dim (or bf16's placeholder): reuse the trained scales
+                # — refitting would silently re-encode the whole table
+                s_new = self.graph.scales
+                scales = self.graph.scales
+            c_new = quant_codec.quantize(new, quant, s_new)
+            codes = jnp.concatenate([self.graph.codes, c_new])
+            if not quant.keep_float:
+                store_new = np.asarray(
+                    quant_codec.dequantize(c_new, quant, s_new), np.float32)
+        vectors = np.concatenate([vectors, store_new])
+
+        new_ids = np.arange(n_old, n_new, dtype=np.int64)
+        insert_points(
+            nbrs, vectors, int(self.graph.medoid), new_ids, n_old,
+            degree=spec.degree, alpha=spec.alpha, ef=spec.resolved_ef,
+            metric=self._build_metric(), build_batch=spec.build_batch,
+            build_backend=spec.build_backend)
+
+        from repro.core.graph import _flatten_top
+        flat = _flatten_top(nbrs, vectors, self.graph.n_top)
+        self.graph = PaddedCSR(
+            nbrs=jnp.asarray(nbrs), vectors=jnp.asarray(vectors),
+            medoid=self.graph.medoid, n_top=self.graph.n_top,
+            flat=jnp.asarray(flat), codes=codes, scales=scales)
+        self.graph = apply_entry_policy(self.graph, spec)
+        if self.old_from_new is not None:
+            # new points keep identity labels past the grouped prefix
+            self.old_from_new = np.concatenate(
+                [self.old_from_new, new_ids])
+            self._ofn = jnp.asarray(self.old_from_new, jnp.int32)
+        if self.tombstone is not None:
+            self.tombstone = np.concatenate(
+                [self.tombstone, np.zeros(new_ids.shape[0], bool)])
+            self._tomb = jnp.asarray(self.tombstone)
+        self._invalidate()
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone vertices and repair their neighborhoods in place.
+
+        FreshDiskANN-style lazy delete: the rows stay in the graph as
+        navigable waypoints (their out-edges survive), every live
+        in-neighbor re-prunes over its survivors plus the deleted vertex's
+        live out-edges (:func:`repro.core.build.repair_deleted`), and every
+        search / ``exact`` call masks tombstoned ids from results.  Returns
+        the number of newly deleted vertices; already-deleted and duplicate
+        ids are ignored.  Deleting every remaining vertex is refused.
+        """
+        if self.spec.builder == "hnsw":
+            raise NotImplementedError(
+                "incremental delete() is supported for the nsg builder only")
+        ids = np.unique(np.asarray(ids, np.int64).ravel())
+        if ids.shape[0] == 0:
+            return 0
+        n = self.n_nodes
+        if self.old_from_new is not None:
+            # callers speak original ids; tombstones live in internal space
+            new_from_old = np.empty(self.old_from_new.shape[0], np.int64)
+            new_from_old[self.old_from_new] = np.arange(
+                self.old_from_new.shape[0])
+            if ids[0] < 0 or ids[-1] >= new_from_old.shape[0]:
+                raise ValueError(f"ids out of range [0, "
+                                 f"{new_from_old.shape[0]})")
+            internal = new_from_old[ids]
+        else:
+            if ids[0] < 0 or ids[-1] >= n:
+                raise ValueError(f"ids out of range [0, {n})")
+            internal = ids
+        tomb = (self.tombstone.copy() if self.tombstone is not None
+                else np.zeros(n, bool))
+        fresh = internal[~tomb[internal]]
+        if fresh.shape[0] == 0:
+            return 0
+        if int(tomb.sum()) + fresh.shape[0] >= n:
+            raise ValueError("delete() would tombstone every vertex; "
+                             "drop the index instead")
+        tomb[fresh] = True
+
+        spec = self.spec
+        nbrs = np.asarray(self.graph.nbrs).copy()
+        vectors = np.asarray(self.graph.vectors, np.float32)
+        repair_deleted(nbrs, vectors, tomb, degree=spec.degree,
+                       alpha=spec.alpha, metric=self._build_metric())
+
+        medoid = self.graph.medoid
+        if tomb[int(medoid)]:
+            # the entry vertex died: re-elect among survivors (the row
+            # itself stays — it is still a fine navigable waypoint)
+            if spec.entry_policy == "max_norm":
+                norms = np.linalg.norm(vectors, axis=1)
+                medoid = jnp.asarray(
+                    int(np.argmax(np.where(tomb, -np.inf, norms))),
+                    jnp.int32)
+            else:
+                medoid = jnp.asarray(
+                    compute_medoid(vectors, metric=self._build_metric(),
+                                   alive=~tomb), jnp.int32)
+
+        from repro.core.graph import _flatten_top
+        flat = _flatten_top(nbrs, np.asarray(self.graph.vectors),
+                            self.graph.n_top)
+        self.graph = self.graph._replace(
+            nbrs=jnp.asarray(nbrs), medoid=medoid, flat=jnp.asarray(flat))
+        self.tombstone = tomb
+        self._tomb = jnp.asarray(tomb)
+        self._invalidate()
+        return int(fresh.shape[0])
 
     # -- persistence -------------------------------------------------------
 
@@ -273,12 +463,21 @@ class AnnIndex:
         # predate the field: unquantized artifacts stay format-1 END TO END
         # (format-1 stamp AND no quant key), and a default "medoid" entry
         # policy leaves no entry_policy key
-        fmt = _SAVE_FORMAT if self.graph.codes is not None else 1
+        has_tomb = self.tombstone is not None and bool(self.tombstone.any())
+        fmt = 1
+        if self.graph.codes is not None:
+            fmt = 2
+        if has_tomb:
+            fmt = _SAVE_FORMAT
         spec_dict = dataclasses.asdict(self.spec)
         if not quant.enabled:
             del spec_dict["quant"]
         if self.spec.entry_policy == "medoid":
             del spec_dict["entry_policy"]
+        if self.spec.build_batch == 32:
+            del spec_dict["build_batch"]
+        if self.spec.build_backend == "ref":
+            del spec_dict["build_backend"]
         arrays = dict(
             format=np.int64(fmt),
             spec=np.asarray(json.dumps(spec_dict)),
@@ -298,6 +497,8 @@ class AnnIndex:
             arrays["scales"] = np.asarray(self.graph.scales, np.float32)
         if self.old_from_new is not None:
             arrays["old_from_new"] = self.old_from_new
+        if has_tomb:
+            arrays["tombstone"] = self.tombstone
         if self.hnsw is not None:
             arrays["hnsw_entry"] = np.int64(self.hnsw.entry)
             arrays["hnsw_num_levels"] = np.int64(len(self.hnsw.level_nbrs))
@@ -344,6 +545,8 @@ class AnnIndex:
         )
         old_from_new = (np.asarray(z["old_from_new"])
                         if "old_from_new" in z.files else None)
+        tombstone = (np.asarray(z["tombstone"], bool)
+                     if "tombstone" in z.files else None)
         hnsw = None
         if "hnsw_entry" in z.files:
             n_levels = int(z["hnsw_num_levels"])
@@ -355,7 +558,8 @@ class AnnIndex:
                                   for i in range(n_levels)),
                 entry=int(z["hnsw_entry"]),
             )
-        return cls(spec, graph, hnsw=hnsw, old_from_new=old_from_new)
+        return cls(spec, graph, hnsw=hnsw, old_from_new=old_from_new,
+                   tombstone=tombstone)
 
     # -- search ------------------------------------------------------------
 
@@ -392,7 +596,8 @@ class AnnIndex:
             cfg = cfg.with_(k=pool, queue_len=max(cfg.queue_len, pool))
         normalize = metric == "cosine"
         has_remap = self.old_from_new is not None
-        ofn = self._ofn
+        has_tomb = self.tombstone is not None and bool(self.tombstone.any())
+        ofn, tomb = self._ofn, self._tomb
         n_top, n_nodes = self.graph.n_top, self.graph.n_nodes
         algorithm = params.algorithm
         hnsw = self.hnsw
@@ -428,13 +633,27 @@ class AnnIndex:
             raise ValueError(algorithm)
 
         @jax.jit
-        def jitted(nbrs, vectors, medoid, flat, codes, scales, ofn_arr, q):
+        def jitted(nbrs, vectors, medoid, flat, codes, scales, ofn_arr,
+                   tomb_arr, q):
             g = PaddedCSR(nbrs=nbrs, vectors=vectors, medoid=medoid,
                           n_top=n_top, flat=flat, codes=codes, scales=scales)
             q = q.astype(jnp.float32)
             if normalize:
                 q = normalize_queries(q)
             ids, dists, stats = run(g, q)
+            if has_tomb:
+                # tombstoned vertices are waypoints, never answers: mask
+                # them to the sentinel (their slot distance to +inf) and
+                # stable-sort live results to the front — BEFORE re-ranking
+                # (which treats sentinels as +inf) and the grouping remap
+                safe = jnp.minimum(ids, n_nodes - 1)
+                dead = tomb_arr[safe] & (ids < n_nodes)
+                dists = jnp.where(dead, jnp.inf, dists)
+                ids = jnp.where(dead, n_nodes, ids).astype(jnp.int32)
+                if rerank_k == 0:
+                    dists, ids = jax.lax.sort(
+                        (dists, ids), num_keys=2, is_stable=True,
+                        dimension=-1)
             if rerank_k > 0:
                 # the AQR-HNSW two-stage shape: quantized (or plain) best-
                 # first traversal, then exact f32 re-ranking of the pool —
@@ -451,7 +670,8 @@ class AnnIndex:
             if q.ndim != 2:
                 raise ValueError(f"queries must be (B, d), got {q.shape}")
             out = jitted(graph.nbrs, graph.vectors, graph.medoid,
-                         graph.flat, graph.codes, graph.scales, ofn, q)
+                         graph.flat, graph.codes, graph.scales, ofn, tomb,
+                         q)
             return SearchResult(*out)
 
         self._searcher_cache[key] = fn
@@ -481,7 +701,17 @@ class AnnIndex:
             q = q / np.maximum(
                 np.linalg.norm(q, axis=1, keepdims=True), 1e-12)
             metric = "ip"
-        ids, dists = exact_knn(self._host_vectors, q, k, metric=metric)
+        has_tomb = self.tombstone is not None and bool(self.tombstone.any())
+        if has_tomb:
+            # over-fetch so k live results survive the tombstone filter
+            kk = min(k + int(self.tombstone.sum()), self.n_nodes)
+            ids, dists = exact_knn(self._host_vectors, q, kk, metric=metric)
+            dead = self.tombstone[ids]
+            order = np.argsort(dead, axis=1, kind="stable")
+            ids = np.take_along_axis(ids, order, axis=1)[:, :k]
+            dists = np.take_along_axis(dists, order, axis=1)[:, :k]
+        else:
+            ids, dists = exact_knn(self._host_vectors, q, k, metric=metric)
         if self.old_from_new is not None:
             ids = self.old_from_new[ids].astype(np.int32)
         return ids, dists

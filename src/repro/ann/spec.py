@@ -67,6 +67,17 @@ class IndexSpec:
     #                              (repro.quant): "int8" | "bf16" | "none",
     #                              accepted as a dtype string, QuantSpec, or
     #                              the json-round-tripped dict
+    build_batch: int = 32        # construction compute tile: how many
+    #                              candidate searches ride in one jit-compiled
+    #                              search_topm_batch call during batch
+    #                              insertion.  A THROUGHPUT knob only — the
+    #                              built graph is bit-identical for every
+    #                              value (build_batch=1 reproduces the serial
+    #                              builder exactly); see core/build.py.
+    build_backend: str = "ref"   # distance backend for construction's
+    #                              candidate searches (kernel registry name).
+    #                              Like build_batch it cannot change the
+    #                              result — only how fast it is computed.
 
     def __post_init__(self):
         object.__setattr__(self, "quant", coerce_quant(self.quant))
@@ -90,6 +101,8 @@ class IndexSpec:
         if self.builder == "hnsw" and self.n_top_fraction > 0:
             raise ValueError("neighbor grouping (n_top_fraction) is "
                              "supported for the nsg builder only")
+        if self.build_batch < 1:
+            raise ValueError("build_batch must be >= 1")
 
     @property
     def resolved_knn_k(self) -> int:

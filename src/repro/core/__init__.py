@@ -1,9 +1,10 @@
 # Speed-ANN core: the paper's contribution as composable JAX modules.
 from repro.core.config import SearchConfig  # noqa: F401
 from repro.core.graph import (PaddedCSR, make_padded_csr, group_by_indegree,  # noqa: F401
-                              compute_medoid)
-from repro.core.build import (build_nsg, build_hnsw, exact_knn,  # noqa: F401
-                              knn_graph, normalize_rows)
+                              compute_medoid, remap_sentinels)
+from repro.core.build import (build_nsg, build_nsg_serial, build_hnsw,  # noqa: F401
+                              exact_knn, insert_points, knn_graph,
+                              normalize_rows, repair_deleted)
 from repro.core.bfis import (bfis_search_batch, search_topm,  # noqa: F401
                              search_topm_batch, hnsw_search_batch, dist_l2,
                              dist_ip, make_ref_dist_fn, point_dist,

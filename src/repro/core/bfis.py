@@ -246,21 +246,16 @@ def staged_m(step: jax.Array, cfg: SearchConfig) -> jax.Array:
                        jnp.int32(cfg.m_max))
 
 
-def search_topm_batch(
+def _run_topm_batch(
     graph: PaddedCSR,
     queries: jax.Array,
     cfg: SearchConfig,
     start: Optional[jax.Array] = None,
     dist_fn: Optional[DistFn] = None,
-) -> Tuple[jax.Array, jax.Array, SearchStats]:
-    """Batch-major single-queue top-M search over a (B, d) query batch.
-
-    One ``lax.while_loop`` advances every query per iteration (ONE distance
-    launch per global step for the whole batch); converged lanes are masked
-    no-ops, so per-query counters stay exact and results are bit-identical
-    to vmapping :func:`search_topm`.  ``cfg.m_max == 1`` reproduces BFiS /
-    Algorithm 1 exactly.  Returns (ids (B, k), dists (B, k), stats (B,)).
-    """
+) -> _TopMState:
+    """Run the batch-major top-M loop to convergence; returns the final
+    state (frontier + visited + stats), from which the public entry points
+    slice their results."""
     dist_fn = resolve_dist_fn(cfg, dist_fn)
     st = _init_state_batch(graph, queries, cfg, start)
 
@@ -289,9 +284,53 @@ def search_topm_batch(
         )
         return lane_select(alive, _TopMState(frontier, visited, stats), s)
 
-    st = jax.lax.while_loop(cond, body, st)
+    return jax.lax.while_loop(cond, body, st)
+
+
+def search_topm_batch(
+    graph: PaddedCSR,
+    queries: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: Optional[DistFn] = None,
+) -> Tuple[jax.Array, jax.Array, SearchStats]:
+    """Batch-major single-queue top-M search over a (B, d) query batch.
+
+    One ``lax.while_loop`` advances every query per iteration (ONE distance
+    launch per global step for the whole batch); converged lanes are masked
+    no-ops, so per-query counters stay exact and results are bit-identical
+    to vmapping :func:`search_topm`.  ``cfg.m_max == 1`` reproduces BFiS /
+    Algorithm 1 exactly.  Returns (ids (B, k), dists (B, k), stats (B,)).
+    """
+    st = _run_topm_batch(graph, queries, cfg, start, dist_fn)
     ids, dists = fq.results_batch(st.frontier, cfg.k)
     return ids, dists, st.stats
+
+
+def search_topm_batch_visited(
+    graph: PaddedCSR,
+    queries: jax.Array,
+    cfg: SearchConfig,
+    start: Optional[jax.Array] = None,
+    dist_fn: Optional[DistFn] = None,
+) -> Tuple[jax.Array, jax.Array, SearchStats, jax.Array]:
+    """:func:`search_topm_batch` that ALSO returns the per-lane visited set
+    as a (B, N) bool mask (requires ``cfg.visited_mode == "bitmap"``).
+
+    The visited set — every vertex whose distance the traversal evaluated,
+    not just the k survivors — is Vamana's robust-prune candidate pool V:
+    it contains the far-out vertices along the entry→neighborhood descent
+    path, whose pruned survivors become the graph's long-range edges.  The
+    batched builder (``core.build``) is the consumer.  Per-lane content is
+    batch-invariant like the results themselves.
+    """
+    if cfg.visited_mode != "bitmap":
+        raise ValueError(
+            "search_topm_batch_visited needs visited_mode='bitmap' (the "
+            f"(B, N) mask IS the visited set); got {cfg.visited_mode!r}")
+    st = _run_topm_batch(graph, queries, cfg, start, dist_fn)
+    ids, dists = fq.results_batch(st.frontier, cfg.k)
+    return ids, dists, st.stats, st.visited.table
 
 
 def search_topm(

@@ -368,8 +368,10 @@ def build_partitioned_index(data, num_shards: int, spec=None) -> ShardedIndex:
     """Corpus partitioning driven by an :class:`repro.ann.IndexSpec`.
 
     Honors the spec's builder knobs (degree, knn_k, ef_construction, passes,
-    seed) and its metric: for ``cosine`` the corpus is unit-normalized
-    before partitioning (cosine == ip on the unit sphere), matching
+    seed, and the batched-construction ``build_batch``/``build_backend``
+    tile — every per-shard build runs through the batch-insertion path) and
+    its metric: for ``cosine`` the corpus is unit-normalized before
+    partitioning (cosine == ip on the unit sphere), matching
     ``AnnIndex.build``.  Returns a :class:`ShardedIndex` for
     :func:`corpus_sharded_search` / :func:`corpus_engine_searcher`.
     """
@@ -387,7 +389,8 @@ def build_partitioned_index(data, num_shards: int, spec=None) -> ShardedIndex:
     return build_partitioned(
         data, num_shards, degree=spec.degree, knn_k=spec.resolved_knn_k,
         alpha=spec.alpha, ef_construction=spec.resolved_ef,
-        passes=spec.passes, seed=spec.seed, metric=build_metric)
+        passes=spec.passes, seed=spec.seed, metric=build_metric,
+        build_batch=spec.build_batch, build_backend=spec.build_backend)
 
 
 def corpus_engine_searcher(index: ShardedIndex, params, mesh: Mesh,

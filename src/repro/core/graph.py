@@ -93,19 +93,48 @@ def _flatten_top(nbrs: np.ndarray, vectors: np.ndarray, n_top: int) -> np.ndarra
     return flat.astype(vectors.dtype)
 
 
-def compute_medoid(vectors: np.ndarray, metric: str = "l2") -> int:
+def compute_medoid(vectors: np.ndarray, metric: str = "l2",
+                   alive: Optional[np.ndarray] = None) -> int:
     """Vertex closest to the dataset centroid (NSG's navigating node).
 
     For "ip" the navigating node is the vertex with the largest inner
     product against the centroid (the MIPS analog of "closest"); "cosine"
     callers pass pre-normalized vectors, where l2 and ip orderings agree.
+
+    ``alive`` (optional (N,) bool mask) restricts both the centroid and the
+    argmin/argmax to live vertices — the incremental-delete path re-elects a
+    navigating node among survivors when the medoid is tombstoned.
     """
     v = np.asarray(vectors, np.float32)
+    if alive is not None:
+        alive = np.asarray(alive, bool)
+        if not alive.any():
+            raise ValueError("compute_medoid: no live vertices")
+        centroid = v[alive].mean(axis=0)
+        if metric == "ip":
+            score = np.where(alive, v @ centroid, -np.inf)
+            return int(np.argmax(score))
+        d = np.where(alive, np.linalg.norm(v - centroid, axis=1), np.inf)
+        return int(np.argmin(d))
     centroid = v.mean(axis=0)
     if metric == "ip":
         return int(np.argmax(v @ centroid))
     d = np.linalg.norm(v - centroid, axis=1)
     return int(np.argmin(d))
+
+
+def remap_sentinels(nbrs: np.ndarray, old_n: int, new_n: int) -> np.ndarray:
+    """Rewrite padding entries when the node count changes (incremental add).
+
+    The padded-CSR sentinel is the node count itself, so growing a graph from
+    ``old_n`` to ``new_n`` rows invalidates every ``old_n`` padding entry —
+    it would alias the first inserted point.  Must run BEFORE the neighbor
+    table is grown.  Returns a new array; out-of-range ids (>= old_n or < 0)
+    all normalize to the new sentinel.
+    """
+    nbrs = np.asarray(nbrs, np.int32)
+    return np.where((nbrs < 0) | (nbrs >= old_n),
+                    np.int32(new_n), nbrs)
 
 
 # ---------------------------------------------------------------------------
